@@ -1,0 +1,47 @@
+"""Shared benchmark infrastructure: datasets, index cache, timing."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import JunoConfig, build, exact_topk
+from repro.data import DEEP_LIKE, SIFT_LIKE, TTI_LIKE, make_dataset
+
+# CPU-scaled defaults (flags in run.py scale up)
+N_POINTS = 30_000
+N_QUERIES = 64
+N_CLUSTERS = 128
+N_ENTRIES = 128
+
+
+@functools.lru_cache(maxsize=4)
+def get_bench_index(dataset: str = "deep", n_points: int = N_POINTS,
+                    n_queries: int = N_QUERIES):
+    spec = {"deep": DEEP_LIKE, "sift": SIFT_LIKE, "tti": TTI_LIKE}[dataset]
+    pts, queries = make_dataset(spec, n_points, n_queries,
+                                key=jax.random.PRNGKey(11))
+    cfg = JunoConfig(n_clusters=N_CLUSTERS, n_entries=N_ENTRIES,
+                     metric=spec.metric, calib_queries=48, kmeans_iters=8)
+    index = build(pts, cfg)
+    _, gt = exact_topk(queries, pts, k=100, metric=spec.metric)
+    return pts, queries, index, gt, cfg
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time in seconds (jit-warm)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

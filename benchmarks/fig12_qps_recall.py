@@ -1,0 +1,71 @@
+"""Paper Fig. 12: QPS vs recall Pareto — JUNO-L/M/H/H2 operating points vs
+the IVFPQ baseline (full LUT, no selection ≙ FAISS semantics in this stack).
+
+CPU wall time is a proxy for the shape of the trade-off; the TPU throughput
+claim is carried by the derived work columns: f32 gather-accumulate ops per
+query (what the paper's selection skips) and int8-vs-f32 scan mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import recall_1_at_k, recall_n_at_k, search
+from .common import emit, get_bench_index, time_fn
+
+
+def _work_per_query(cfg, nprobe, p_cap, mode, rerank=400):
+    """Derived: f32 LUT gather-adds + int8 adds per query (S = subspaces)."""
+    s = 48  # deep-like: 96 / M=2
+    n_cand = nprobe * p_cap
+    if mode == "baseline" or mode == "H":
+        return n_cand * s, 0
+    if mode in ("L", "M"):
+        return 0, n_cand * s
+    if mode == "H2":
+        return rerank * s, n_cand * s
+    raise ValueError(mode)
+
+
+def run(dataset="deep"):
+    pts, queries, index, gt, cfg = get_bench_index(dataset)
+    metric = cfg.metric
+    p_cap = index.ivf.capacity
+    gt1, gt100 = gt[:, 0], gt[:, :100]
+
+    points = []
+    for nprobe in [4, 8, 16]:
+        # baseline: IVFPQ with full LUT (threshold → ∞ disables selection)
+        for name, mode, scale in [
+                ("baseline", "H", 1e6),
+                ("JUNO-H", "H", 1.0),
+                ("JUNO-H2", "H2", 1.0),
+                ("JUNO-M", "M", 1.0),
+                ("JUNO-L", "L", 1.0),
+                ("JUNO-L-tight", "L", 0.5)]:
+            m = "H" if name == "baseline" else mode
+
+            def fn():
+                return search(index, queries, nprobe=nprobe, k=100, mode=m,
+                              metric=metric, thres_scale=scale)
+
+            t = time_fn(fn, iters=3)
+            _, ids = fn()
+            r1 = float(recall_1_at_k(ids, gt1))
+            r100 = float(recall_n_at_k(ids, gt100))
+            qps = queries.shape[0] / t
+            f32_ops, i8_ops = _work_per_query(
+                cfg, nprobe, p_cap, "baseline" if name == "baseline" else mode)
+            emit(f"fig12_{dataset}_{name}_np{nprobe}",
+                 t / queries.shape[0] * 1e6,
+                 f"qps={qps:.0f};R1@100={r1:.3f};R100@1000={r100:.3f};"
+                 f"f32_ops/q={f32_ops};int8_ops/q={i8_ops}")
+            points.append((name, nprobe, qps, r1))
+
+    # Pareto summary: best QPS at each recall band (the paper's grey line)
+    for lo, hi, tag in [(0.0, 0.95, "lowQ"), (0.95, 0.97, "midQ"),
+                        (0.97, 1.01, "highQ")]:
+        cand = [(q, n, np_) for (n, np_, q, r) in points if lo <= r < hi]
+        if cand:
+            q, n, np_ = max(cand)
+            emit(f"fig12_{dataset}_pareto_{tag}", 0.0,
+                 f"best={n};nprobe={np_};qps={q:.0f}")

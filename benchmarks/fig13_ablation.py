@@ -1,0 +1,86 @@
+"""Paper Fig. 13: optimization ablations.
+(a) without hit-count selection (JUNO-H only) and without kernel fusion
+    (impl="ref" vs impl="pallas" — the TPU analogue of removing the
+    RT-core/Tensor-core pipelining, cf. DESIGN.md §2);
+(b) dynamic vs static thresholds: small-static / large-static / dynamic,
+    reporting recall and the selected-entry budget (the throughput driver).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import recall_1_at_k, search
+from repro.core import density as density_lib
+from repro.core import lut as lut_lib
+from repro.core.ivf import filter_clusters
+from .common import emit, get_bench_index, time_fn
+
+
+def run():
+    pts, queries, index, gt, cfg = get_bench_index("deep")
+    gt1 = gt[:, 0]
+    nprobe = 16
+
+    # (a) component ablations. NOTE: impl="pallas" on CPU runs the kernels
+    # in interpret mode (Python per block) — correctness-equivalence is
+    # asserted, wall time is NOT comparable and therefore not measured here;
+    # the fused kernels' perf claim lives in the TPU roofline (§Perf).
+    for name, kw in [
+            ("full_H2", dict(mode="H2")),
+            ("no_hitcount_H", dict(mode="H")),
+            ("no_fusion_ref_H2", dict(mode="H2", impl="ref"))]:
+        def fn():
+            return search(index, queries, nprobe=nprobe, k=100, **kw)
+        t = time_fn(fn, iters=3)
+        _, ids = fn()
+        emit(f"fig13a_{name}", t / queries.shape[0] * 1e6,
+             f"R1@100={float(recall_1_at_k(ids, gt1)):.3f}")
+    _, ids_p = search(index, queries, nprobe=nprobe, k=100, mode="H2",
+                      impl="pallas")
+    _, ids_r = search(index, queries, nprobe=nprobe, k=100, mode="H2",
+                      impl="ref")
+    agree = float(jnp.mean((ids_p == ids_r).astype(jnp.float32)))
+    emit("fig13a_fusion_pallas_H2", 0.0,
+         f"id_agreement_vs_ref={agree:.3f};timing=TPU-only(interpret on CPU)")
+
+    # (b) threshold strategies: static uses the dynamic model's min/max
+    q = queries.astype(jnp.float32)
+    _, cids = filter_clusters(q, index.ivf, nprobe=nprobe)
+    res = q[:, None, :] - index.ivf.centroids[cids]
+    qsub = res.reshape(q.shape[0], nprobe, -1, cfg.sub_dim)
+    tau_dyn = density_lib.predict_threshold(index.density, qsub, 1.0)
+    lo, hi = float(index.density.tau_min), float(index.density.tau_max)
+
+    for name, tau in [("static_small", jnp.full_like(tau_dyn, lo)),
+                      ("static_large", jnp.full_like(tau_dyn, hi)),
+                      ("dynamic", tau_dyn)]:
+        _, mask = lut_lib.build_lut(qsub, index.codebook, tau)
+        kept = float(jnp.mean(mask))      # selected-entry budget ∝ 1/QPS
+        _, ids = _static_search(index, queries, nprobe, tau)
+        emit(f"fig13b_{name}", 0.0,
+             f"entries_kept%={kept * 100:.1f};"
+             f"R1@100={float(recall_1_at_k(ids, gt1)):.3f}")
+
+
+def _static_search(index, queries, nprobe, tau):
+    """JUNO-H with a fixed threshold tensor (bypasses the density model)."""
+    import functools
+    from repro.core import scan as scan_lib
+    q = queries.astype(jnp.float32)
+    _, cids = filter_clusters(q, index.ivf, nprobe=nprobe)
+    res = q[:, None, :] - index.ivf.centroids[cids]
+    qsub = res.reshape(q.shape[0], nprobe, -1, 2)
+    lutv, mask = lut_lib.build_lut(qsub, index.codebook, tau)
+    mlut = lut_lib.masked_lut(lutv, mask, tau)
+    codes = index.cluster_codes[cids]
+    valid = index.ivf.valid[cids]
+    ids = index.ivf.point_ids[cids]
+    scores = jax.vmap(jax.vmap(scan_lib.adc_scan))(mlut, codes, valid)
+    flat_s = scores.reshape(q.shape[0], -1)
+    flat_i = ids.reshape(q.shape[0], -1)
+    s, sel = jax.lax.top_k(-flat_s, 100)
+    return -s, jnp.take_along_axis(flat_i, sel, axis=1)

@@ -1,0 +1,55 @@
+"""Paper Fig. 3(a): execution-time breakdown of the three online stages
+(filtering / L2-LUT construction / distance calculation) across nprobe.
+Reproduces the paper's finding: LUT construction + distance calculation
+dominate (90%+) and scale with nprobe; filtering is nprobe-independent."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import juno as juno_lib
+from repro.core import lut as lut_lib
+from repro.core import scan as scan_lib
+from repro.core import density as density_lib
+from repro.core.ivf import filter_clusters
+from .common import emit, get_bench_index, time_fn
+
+
+def run():
+    pts, queries, index, gt, cfg = get_bench_index("deep")
+    m = cfg.sub_dim
+
+    for nprobe in [4, 8, 16, 32]:
+        q = queries.astype(jnp.float32)
+
+        filt = jax.jit(lambda qq: filter_clusters(qq, index.ivf,
+                                                  nprobe=nprobe))
+        t_filter = time_fn(filt, q)
+        base, cids = filt(q)
+
+        def lut_stage(qq, cids):
+            res = qq[:, None, :] - index.ivf.centroids[cids]
+            qsub = res.reshape(qq.shape[0], nprobe, -1, m)
+            tau = density_lib.predict_threshold(index.density, qsub, 1.0)
+            lutv, mask = lut_lib.build_lut(qsub, index.codebook, tau)
+            return lut_lib.masked_lut(lutv, mask, tau)
+
+        lut_j = jax.jit(lut_stage)
+        t_lut = time_fn(lut_j, q, cids)
+        mlut = lut_j(q, cids)
+
+        def dist_stage(mlut, cids):
+            codes = index.cluster_codes[cids]
+            valid = index.ivf.valid[cids]
+            scan = jax.vmap(jax.vmap(scan_lib.adc_scan))
+            return scan(mlut, codes, valid)
+
+        dist_j = jax.jit(dist_stage)
+        t_dist = time_fn(dist_j, mlut, cids)
+
+        total = t_filter + t_lut + t_dist
+        nq = q.shape[0]
+        emit(f"fig3_breakdown_nprobe{nprobe}", total / nq * 1e6,
+             f"filter%={t_filter / total * 100:.1f};"
+             f"lut%={t_lut / total * 100:.1f};"
+             f"dist%={t_dist / total * 100:.1f}")

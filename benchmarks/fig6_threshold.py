@@ -1,0 +1,58 @@
+"""Paper Fig. 6 + 7(b): remaining search points needing distance
+accumulation vs threshold scale (linear-ish decrease), and the power-law
+top-100 retention when the threshold shrinks (×0.5 keeps ≈90%)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import density as density_lib
+from repro.core import lut as lut_lib
+from repro.core.ivf import filter_clusters
+from repro.core import scan as scan_lib
+from .common import emit, get_bench_index
+
+
+def run():
+    pts, queries, index, gt, cfg = get_bench_index("deep")
+    nprobe = 16
+    m = cfg.sub_dim
+    q = queries.astype(jnp.float32)
+    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe)
+    res = q[:, None, :] - index.ivf.centroids[cids]
+    qsub = res.reshape(q.shape[0], nprobe, -1, m)
+    codes = index.cluster_codes[cids]
+    valid = index.ivf.valid[cids]
+    ids = index.ivf.point_ids[cids]
+
+    for scale in [0.1, 0.25, 0.5, 1.0]:
+        tau = density_lib.predict_threshold(index.density, qsub, scale)
+        _, mask = lut_lib.build_lut(qsub, index.codebook, tau)
+        # work metrics: entries kept in the LUT (stage-B savings) and
+        # (point, subspace) lookups skipped (stage-C savings, the paper's
+        # inverted-index skip, Alg. 2)
+        entries_kept = float(jnp.mean(mask))
+        kept = jax.vmap(jax.vmap(scan_lib.hit_count_scan))(
+            mask.astype(jnp.int8), codes, valid)
+        s_dim = codes.shape[-1]
+        lookups_kept = float(jnp.sum(jnp.where(valid, kept, 0))) / \
+            (float(jnp.sum(valid)) * s_dim)
+        # a point "remains" if hit in ≥1 subspace (inverted-index semantics)
+        remains = (kept > 0) & valid
+        frac = float(jnp.sum(remains)) / float(jnp.sum(valid))
+
+        # top-100 retention: fraction of true top-100 still fully covered
+        gt100 = np.asarray(gt[:, :100])
+        idn = np.asarray(ids).reshape(ids.shape[0], -1)
+        remn = np.asarray(remains).reshape(ids.shape[0], -1)
+        ret = 0.0
+        for qi in range(idn.shape[0]):
+            keep_ids = set(idn[qi][remn[qi]])
+            ret += np.mean([g in keep_ids for g in gt100[qi]])
+        ret /= idn.shape[0]
+        emit(f"fig6_threshold_scale{scale}", 0.0,
+             f"remaining%={frac * 100:.1f};"
+             f"entries_kept%={entries_kept * 100:.1f};"
+             f"lookups_kept%={lookups_kept * 100:.1f};"
+             f"top100_retained%={ret * 100:.1f}")

@@ -1,0 +1,41 @@
+"""Paper Fig. 7(a): correlation between the threshold needed to contain the
+top-100 and local point density (negative), and the polynomial regressor's
+fit quality — the dynamic-threshold machinery's calibration report."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import density as density_lib
+from repro.core.ivf import filter_clusters
+from repro.core.pq import split_subspaces
+from .common import emit, get_bench_index
+
+
+def run():
+    pts, queries, index, gt, cfg = get_bench_index("deep")
+    _, c1 = filter_clusters(queries, index.ivf, nprobe=1)
+    qres = queries - index.ivf.centroids[c1[:, 0]]
+    qsub = split_subspaces(qres, cfg.sub_dim)              # (Q, S, M)
+
+    # needed threshold per (query, subspace) from ground truth
+    gt_codes = index.codes[gt[:, :100]].astype(jnp.int32)  # (Q, 100, S)
+    ent = index.codebook.entries
+    s_idx = jnp.arange(ent.shape[0])[None, None, :]
+    gt_entries = ent[s_idx, gt_codes]
+    diff = gt_entries - qsub[:, None]
+    tau_needed = jnp.sqrt(jnp.max(jnp.sum(diff * diff, -1), axis=1))
+
+    dens = density_lib.lookup_density(index.density, qsub)
+    x = np.asarray(dens).ravel()
+    y = np.asarray(tau_needed).ravel()
+    corr = float(np.corrcoef(x, y)[0, 1])
+
+    pred = np.asarray(density_lib.predict_threshold(index.density, qsub))
+    resid = np.abs(pred.ravel() - y) / np.maximum(y, 1e-6)
+    # fraction of subspaces where predicted tau covers the needed tau
+    coverage = float(np.mean(pred.ravel() >= y * 0.999))
+    emit("fig7_density_threshold", 0.0,
+         f"pearson={corr:.3f};median_rel_err={np.median(resid):.3f};"
+         f"tau_covers_needed%={coverage * 100:.1f}")

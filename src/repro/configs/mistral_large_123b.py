@@ -1,0 +1,15 @@
+"""mistral-large-123b [dense] — hf:mistralai/Mistral-Large-Instruct-2407
+(unverified tier). 88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mistral-large-123b",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=28672, vocab_size=32768,
+)
+
+SMOKE = ModelConfig(
+    name="mistral-large-smoke",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=256, vocab_size=512, attn_chunk=64,
+)

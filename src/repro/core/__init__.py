@@ -1,0 +1,11 @@
+"""JUNO core: sparsity- and locality-aware IVFPQ ANN search (the paper's
+primary contribution), implemented as composable JAX modules.
+
+Public API:
+    JunoConfig, build, search          — end-to-end index (juno.py)
+    exact_topk                         — brute-force oracle (ref.py)
+    recall_1_at_k, recall_n_at_k       — paper metrics (metrics.py)
+"""
+from .juno import JunoConfig, JunoIndexData, build, search  # noqa: F401
+from .ref import exact_topk  # noqa: F401
+from .metrics import recall_1_at_k, recall_n_at_k  # noqa: F401

@@ -1,0 +1,312 @@
+"""JunoIndex — the end-to-end JUNO system (paper Alg. 1 + Alg. 2).
+
+Offline (``build``): IVF k-means → residual PQ codebooks → padded per-cluster
+code storage (the TPU layout of the paper's entry→points inverted index) →
+density grid + polynomial threshold regressor calibration.
+
+Online (``search``): MXU filtering → selective LUT construction with dynamic
+per-subspace thresholds (the RT-core stage, re-mapped per DESIGN.md §2) →
+masked ADC scan (JUNO-H) or int8 hit-count scan (JUNO-L/M) → top-k.
+
+Modes map 1:1 to the paper's operating points:
+  "H" — exact selective distances            (high quality)
+  "M" — reward/penalty hit count, r & r/2    (medium)
+  "L" — plain hit count                      (low quality, max throughput)
+plus one beyond-paper mode exploiting the same sparsity TPU-natively:
+  "H2" — two-stage: int8 hit-count prefilter selects a static top-C
+         candidate set, exact ADC reranks only those. The paper skips
+         far points dynamically on the RT core; H2 gets the same skip as
+         a static-shape top-k — ~(nprobe·P)/C less f32 gather work at
+         JUNO-H-level recall (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import density as density_lib
+from . import lut as lut_lib
+from . import scan as scan_lib
+from .ivf import IVFIndex, build_ivf, filter_clusters
+from .pq import PQCodebook, encode, split_subspaces, train_codebook
+from .ref import exact_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class JunoConfig:
+    n_clusters: int = 1024          # C
+    n_entries: int = 256            # E
+    sub_dim: int = 2                # M (JUNO uses 2-D subspaces)
+    metric: str = "l2"              # "l2" | "ip"
+    kmeans_iters: int = 10
+    capacity_mult: float = 4.0
+    grid_size: int = 64             # density grid G (paper: 100)
+    calib_queries: int = 128        # queries used to fit the threshold poly
+    calib_topk: int = 100           # "top-100" of the paper
+    poly_degree: int = 2
+
+
+class JunoIndexData(NamedTuple):
+    ivf: IVFIndex
+    codebook: PQCodebook
+    codes: jnp.ndarray           # (N, S) uint8
+    cluster_codes: jnp.ndarray   # (C, P, S) uint8 — padded per-cluster codes
+    density: density_lib.DensityModel
+    points_sq: jnp.ndarray       # (N,) f32 (kept for oracles/rerank)
+
+
+def build(points: jnp.ndarray, config: JunoConfig,
+          key: jax.Array | None = None) -> JunoIndexData:
+    """Offline phase (paper Alg. 1 adapted to the TPU layout)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_ivf, k_pq, k_cal = jax.random.split(key, 3)
+    pts = jnp.asarray(points, jnp.float32)
+    n, d = pts.shape
+    s = d // config.sub_dim
+
+    ivf = build_ivf(pts, n_clusters=config.n_clusters,
+                    n_iters=config.kmeans_iters, key=k_ivf,
+                    capacity_mult=config.capacity_mult)
+    residuals = pts - ivf.centroids[ivf.labels]
+    codebook = train_codebook(residuals, n_entries=config.n_entries,
+                              m=config.sub_dim, n_iters=config.kmeans_iters,
+                              key=k_pq)
+    codes = encode(residuals, codebook)                          # (N, S)
+    # Padded per-cluster codes: pad slots read code 0 but are masked by valid.
+    safe_ids = jnp.maximum(ivf.point_ids, 0)
+    cluster_codes = codes[safe_ids]                              # (C, P, S)
+
+    dens_model = _calibrate_density(pts, residuals, codebook, codes, ivf,
+                                    config, k_cal)
+    return JunoIndexData(ivf=ivf, codebook=codebook, codes=codes,
+                         cluster_codes=cluster_codes, density=dens_model,
+                         points_sq=jnp.sum(pts * pts, axis=-1))
+
+
+def _calibrate_density(pts, residuals, codebook, codes, ivf, config, key):
+    """Fit density → threshold polynomial from ground-truth top-k (paper §4.1)."""
+    n = pts.shape[0]
+    nq = min(config.calib_queries, n)
+    qidx = jax.random.choice(key, n, shape=(nq,), replace=False)
+    # perturb so calibration queries are not exact database points
+    noise = 0.01 * jax.random.normal(key, (nq, pts.shape[1])) * jnp.std(pts)
+    queries = pts[qidx] + noise.astype(jnp.float32)
+
+    _, gt_ids = exact_topk(queries, pts, k=config.calib_topk,
+                           metric=config.metric, chunk=min(65536, n))
+    # query-side projections in the geometry the mask uses (DESIGN.md §2)
+    _, c1 = filter_clusters(queries, ivf, nprobe=1, metric=config.metric)
+    if config.metric == "l2":
+        qres = queries - ivf.centroids[c1[:, 0]]
+        qsub = split_subspaces(qres, config.sub_dim)             # (Qs, S, M)
+    else:
+        qsub = split_subspaces(queries, config.sub_dim)
+
+    # per-subspace transformed distance from query proj to each top-k entry
+    gt_codes = codes[gt_ids].astype(jnp.int32)                   # (Qs, K, S)
+    ent = codebook.entries                                       # (S, E, M)
+    s_idx = jnp.arange(ent.shape[0])[None, None, :]
+    gt_entries = ent[s_idx, gt_codes]                            # (Qs, K, S, M)
+    diff = gt_entries - qsub[:, None, :, :]
+    if config.metric == "l2":
+        t = jnp.sum(diff * diff, axis=-1)                        # (Qs, K, S)
+        tau_needed = jnp.sqrt(jnp.max(t, axis=1))                # (Qs, S)
+    else:
+        e_sq = jnp.sum(gt_entries * gt_entries, -1)
+        dot = jnp.sum(gt_entries * qsub[:, None], -1)
+        t = e_sq - 2.0 * dot
+        tau_needed = jnp.sqrt(jnp.maximum(jnp.max(t, axis=1), 0.0))
+
+    sub_pts = jnp.swapaxes(split_subspaces(residuals, config.sub_dim), 0, 1)
+    return density_lib.calibrate(sub_pts, codebook.entries, qsub, tau_needed,
+                                 grid_size=config.grid_size,
+                                 degree=config.poly_degree)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nprobe", "k", "mode", "metric", "impl"))
+def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
+                  k: int, mode: str, metric: str, thres_scale: float,
+                  impl: str = "ref"):
+    """One jitted query batch. Returns (scores (Q,k), ids (Q,k)).
+
+    impl="ref"    — pure-jnp reference path (semantics of record)
+    impl="pallas" — fused Pallas kernels (TPU path; interpret=True on CPU)
+    """
+    q = queries.astype(jnp.float32)
+    nq = q.shape[0]
+    m = index.codebook.sub_dim
+
+    # --- stage A: filtering (MXU GEMM + top-k), paper Fig. 1 bottom-left ---
+    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe, metric=metric)
+
+    # --- stage B: selective LUT construction (the RT-core stage) ---------
+    if metric == "l2":
+        res = q[:, None, :] - index.ivf.centroids[cids]          # (Q, np, D)
+        qsub = res.reshape(nq, nprobe, -1, m)                    # (Q, np, S, M)
+        probe_base = jnp.zeros((nq, nprobe), jnp.float32)
+    else:
+        qsub = jnp.broadcast_to(
+            q.reshape(nq, 1, -1, m), (nq, nprobe, q.shape[1] // m, m))
+        probe_base = base                                        # <q, c_probe>
+    tau = density_lib.predict_threshold(index.density, qsub, thres_scale)
+
+    # --- stage C: distance calculation over the selected clusters --------
+    codes = index.cluster_codes[cids]                            # (Q, np, P, S)
+    valid = index.ivf.valid[cids]                                # (Q, np, P)
+    ids = index.ivf.point_ids[cids]                              # (Q, np, P)
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        mlut, table = kops.build_selective_lut(
+            qsub, index.codebook.entries, index.codebook.entry_sq, tau,
+            metric=metric)
+        if mode == "H":
+            pt_scores = kops.masked_adc_scan(mlut, codes, valid,
+                                             metric=metric)
+            if metric == "ip":
+                pt_scores = pt_scores + probe_base[..., None]
+            higher_better = metric == "ip"
+        else:
+            if mode == "L":  # plain count: clip penalty/inner to {0, 1}
+                table = (table >= 0).astype(jnp.int8)
+            pt_scores = kops.hit_count_scan(table, codes, valid
+                                            ).astype(jnp.float32)
+            higher_better = True
+    elif mode == "H":
+        lut, mask = lut_lib.build_lut(qsub, index.codebook, tau, metric=metric)
+        mlut = lut_lib.masked_lut(lut, mask, tau, metric=metric)
+        scan = jax.vmap(jax.vmap(
+            lambda l, c, v: scan_lib.adc_scan(l, c, v, metric=metric)))
+        pt_scores = scan(mlut, codes, valid)                     # (Q, np, P)
+        if metric == "ip":
+            pt_scores = pt_scores + probe_base[..., None]
+        higher_better = metric == "ip"
+    else:
+        lut, mask = lut_lib.build_lut(qsub, index.codebook, tau, metric=metric)
+        hc_mode = "count" if mode == "L" else "reward_penalty"
+        if metric == "l2":
+            table = lut_lib.hit_tables(lut, mask, tau, mode=hc_mode,
+                                       metric="l2")
+        else:
+            table = lut_lib.hit_tables_ip(lut, index.codebook.entry_sq, tau,
+                                          mode=hc_mode)
+        scan = jax.vmap(jax.vmap(scan_lib.hit_count_scan))
+        pt_scores = scan(table, codes, valid).astype(jnp.float32)
+        higher_better = True
+
+    flat_scores = pt_scores.reshape(nq, -1)
+    flat_ids = ids.reshape(nq, -1)
+    sel_scores, sel = jax.lax.top_k(
+        flat_scores if higher_better else -flat_scores, k)
+    out_ids = jnp.take_along_axis(flat_ids, sel, axis=1)
+    out_scores = sel_scores if higher_better else -sel_scores
+    return out_scores, out_ids
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric", "impl",
+                                             "rerank"))
+def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
+                            nprobe: int, k: int, metric: str,
+                            thres_scale: float, rerank: int = 0,
+                            impl: str = "ref"):
+    """Mode "H2": int8 hit-count prefilter → exact ADC on top-C survivors.
+
+    Beyond-paper: converts JUNO's dynamic skip into a static-shape candidate
+    set so the expensive f32 gather/accumulate runs on C = rerank points
+    instead of nprobe·P (see module docstring)."""
+    q = queries.astype(jnp.float32)
+    nq = q.shape[0]
+    m = index.codebook.sub_dim
+    c_budget = rerank or 4 * k
+
+    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe, metric=metric)
+    if metric == "l2":
+        res = q[:, None, :] - index.ivf.centroids[cids]
+        qsub = res.reshape(nq, nprobe, -1, m)
+        probe_base = jnp.zeros((nq, nprobe), jnp.float32)
+    else:
+        qsub = jnp.broadcast_to(
+            q.reshape(nq, 1, -1, m), (nq, nprobe, q.shape[1] // m, m))
+        probe_base = base
+    tau = density_lib.predict_threshold(index.density, qsub, thres_scale)
+
+    codes = index.cluster_codes[cids]                            # (Q,np,P,S)
+    valid = index.ivf.valid[cids]
+    ids = index.ivf.point_ids[cids]
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        mlut, table = kops.build_selective_lut(
+            qsub, index.codebook.entries, index.codebook.entry_sq, tau,
+            metric=metric)
+        counts = kops.hit_count_scan(table, codes, valid)
+    else:
+        lut, mask = lut_lib.build_lut(qsub, index.codebook, tau,
+                                      metric=metric)
+        mlut = lut_lib.masked_lut(lut, mask, tau, metric=metric)
+        if metric == "l2":
+            table = lut_lib.hit_tables(lut, mask, tau, mode="reward_penalty",
+                                       metric="l2")
+        else:
+            table = lut_lib.hit_tables_ip(lut, index.codebook.entry_sq, tau,
+                                          mode="reward_penalty")
+        counts = jax.vmap(jax.vmap(scan_lib.hit_count_scan))(table, codes,
+                                                             valid)
+
+    # stage 1: top-C candidates by hit count (int32, cheap)
+    p = codes.shape[2]
+    flat_counts = counts.reshape(nq, -1)
+    _, cand = jax.lax.top_k(flat_counts, min(c_budget, nprobe * p))
+    cand_probe = cand // p                                       # (Q, C)
+
+    # stage 2: exact ADC only on survivors
+    cand_codes = jnp.take_along_axis(
+        codes.reshape(nq, -1, codes.shape[-1]), cand[..., None], axis=1)
+    s_idx = jnp.arange(mlut.shape[2])[None, None, :]
+    vals = mlut[jnp.arange(nq)[:, None, None], cand_probe[..., None],
+                s_idx, cand_codes.astype(jnp.int32)]             # (Q, C, S)
+    exact = jnp.sum(vals, axis=-1)
+    cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
+    if metric == "ip":
+        exact = exact + jnp.take_along_axis(probe_base, cand_probe, axis=1)
+        exact = jnp.where(cand_valid, exact, -jnp.inf)
+        sel_s, sel = jax.lax.top_k(exact, k)
+        out_scores = sel_s
+    else:
+        exact = jnp.where(cand_valid, exact, jnp.inf)
+        sel_s, sel = jax.lax.top_k(-exact, k)
+        out_scores = -sel_s
+    cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
+    out_ids = jnp.take_along_axis(cand_ids, sel, axis=1)
+    return out_scores, out_ids
+
+
+def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
+           k: int = 100, mode: str = "H", metric: str = "l2",
+           thres_scale: float = 1.0, batch: int = 64, impl: str = "ref",
+           rerank: int = 0):
+    """Public search API — chunks queries through the jitted batch kernel."""
+    nq = queries.shape[0]
+    out_s, out_i = [], []
+    for i in range(0, nq, batch):
+        qb = queries[i:i + batch]
+        pad = batch - qb.shape[0]
+        if pad:
+            qb = jnp.pad(qb, ((0, pad), (0, 0)))
+        if mode == "H2":
+            s, ids = _search_batch_two_stage(
+                index, qb, nprobe=nprobe, k=k, metric=metric,
+                thres_scale=thres_scale, rerank=rerank, impl=impl)
+        else:
+            s, ids = _search_batch(index, qb, nprobe=nprobe, k=k, mode=mode,
+                                   metric=metric, thres_scale=thres_scale,
+                                   impl=impl)
+        out_s.append(s[:batch - pad])
+        out_i.append(ids[:batch - pad])
+    return jnp.concatenate(out_s), jnp.concatenate(out_i)

@@ -1,0 +1,103 @@
+"""Batched Lloyd k-means in pure JAX — the training primitive for IVF and PQ.
+
+Distances use the MXU-friendly expansion ``|x-c|^2 = |x|^2 - 2 x.c^T + |c|^2``
+so assignment is a single matmul per chunk. Assignment is chunked with
+``lax.map`` so the (N, C) distance matrix never materialises for large N.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansState(NamedTuple):
+    centroids: jnp.ndarray  # (C, D) f32
+    counts: jnp.ndarray     # (C,)   f32 — points per cluster at last iter
+
+
+def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, n - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+
+
+def assign(points: jnp.ndarray, centroids: jnp.ndarray, *, chunk: int = 16384) -> jnp.ndarray:
+    """Nearest-centroid id per point, O(chunk*C) memory. Returns (N,) int32."""
+    n = points.shape[0]
+    n_pad = ((n + chunk - 1) // chunk) * chunk
+    pts = _pad_to(points, n_pad).reshape(n_pad // chunk, chunk, -1)
+    c_sq = jnp.sum(centroids * centroids, axis=-1)  # (C,)
+
+    def one(chunk_pts):
+        d = c_sq[None, :] - 2.0 * chunk_pts @ centroids.T  # |x|^2 constant per row
+        return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+    return jax.lax.map(one, pts).reshape(n_pad)[:n]
+
+
+def _update(points, labels, n_clusters):
+    one_hot = jax.nn.one_hot(labels, n_clusters, dtype=points.dtype)  # (N, C)
+    sums = one_hot.T @ points                                          # (C, D)
+    counts = jnp.sum(one_hot, axis=0)                                  # (C,)
+    return sums, counts
+
+
+def _update_chunked(points, labels, n_clusters, chunk):
+    n = points.shape[0]
+    n_pad = ((n + chunk - 1) // chunk) * chunk
+    pts = _pad_to(points, n_pad).reshape(-1, chunk, points.shape[-1])
+    # padded points get label == n_clusters (one_hot drops them)
+    lbl = jnp.pad(labels, (0, n_pad - n), constant_values=n_clusters)
+    lbl = lbl.reshape(-1, chunk)
+
+    def body(carry, xs):
+        sums, counts = carry
+        p, l = xs
+        s, c = _update(p, l, n_clusters)
+        return (sums + s, counts + c), None
+
+    init = (jnp.zeros((n_clusters, points.shape[-1]), points.dtype),
+            jnp.zeros((n_clusters,), points.dtype))
+    (sums, counts), _ = jax.lax.scan(body, init, (pts, lbl))
+    return sums, counts
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "n_iters", "chunk"))
+def kmeans(points: jnp.ndarray, *, n_clusters: int, n_iters: int = 10,
+           key: jax.Array | None = None, chunk: int = 16384) -> KMeansState:
+    """Lloyd k-means with k-random init. Empty clusters re-seeded from data."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = points.shape[0]
+    init_idx = jax.random.choice(key, n, shape=(n_clusters,), replace=n < n_clusters)
+    centroids = points[init_idx].astype(jnp.float32)
+    pts32 = points.astype(jnp.float32)
+
+    def step(i, carry):
+        centroids, _ = carry
+        labels = assign(pts32, centroids, chunk=chunk)
+        sums, counts = _update_chunked(pts32, labels, n_clusters, chunk)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # dead clusters: re-seed pseudo-randomly from the data (deterministic)
+        reseed = pts32[(init_idx * (i + 2) + 7) % n]
+        new = jnp.where((counts > 0)[:, None], new, reseed)
+        return new, counts
+
+    centroids, counts = jax.lax.fori_loop(
+        0, n_iters, step, (centroids, jnp.zeros((n_clusters,), jnp.float32)))
+    return KMeansState(centroids=centroids, counts=counts)
+
+
+def kmeans_subsampled(points, *, n_clusters, n_iters=10, key=None,
+                      max_train_points=200_000, chunk=16384) -> KMeansState:
+    """FAISS-style: train centroids on a subsample, assign the full set later."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = points.shape[0]
+    if n > max_train_points:
+        idx = jax.random.choice(key, n, shape=(max_train_points,), replace=False)
+        train = points[idx]
+    else:
+        train = points
+    return kmeans(train, n_clusters=n_clusters, n_iters=n_iters, key=key, chunk=chunk)

@@ -1,0 +1,18 @@
+"""Search-quality metrics exactly as defined in the paper §6.1."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def recall_1_at_k(retrieved: jnp.ndarray, gt_top1: jnp.ndarray) -> jnp.ndarray:
+    """R1@K: fraction of queries whose K retrieved ids include the true NN.
+    retrieved (Q, K) int, gt_top1 (Q,) int."""
+    hit = jnp.any(retrieved == gt_top1[:, None], axis=1)
+    return jnp.mean(hit.astype(jnp.float32))
+
+
+def recall_n_at_k(retrieved: jnp.ndarray, gt_topn: jnp.ndarray) -> jnp.ndarray:
+    """R{N}@{K} (paper's R100@1000): mean fraction of the true top-N present
+    among the K retrieved. retrieved (Q, K), gt_topn (Q, N)."""
+    hits = (retrieved[:, None, :] == gt_topn[:, :, None]).any(axis=2)  # (Q, N)
+    return jnp.mean(hits.astype(jnp.float32))

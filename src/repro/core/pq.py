@@ -1,0 +1,80 @@
+"""Product quantization: per-subspace codebook training + encoding.
+
+Follows the paper's setup: the D-dim residual space is split into S = D/M
+M-dim subspaces (M=2 in JUNO so each subspace is a 2-D plane — the property
+the RT mapping exploits and that our grid/threshold machinery inherits).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kmeans import kmeans, assign
+
+
+class PQCodebook(NamedTuple):
+    entries: jnp.ndarray   # (S, E, M) f32 — codebook entry coordinates
+    entry_sq: jnp.ndarray  # (S, E)    f32 — |e|^2, precomputed (MIPS + L2 expansion)
+
+    @property
+    def n_subspaces(self) -> int:
+        return self.entries.shape[0]
+
+    @property
+    def n_entries(self) -> int:
+        return self.entries.shape[1]
+
+    @property
+    def sub_dim(self) -> int:
+        return self.entries.shape[2]
+
+
+def split_subspaces(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(N, D) -> (N, S, M) with S = D // M. D must be divisible by M."""
+    n, d = x.shape
+    assert d % m == 0, f"D={d} not divisible by M={m}"
+    return x.reshape(n, d // m, m)
+
+
+@functools.partial(jax.jit, static_argnames=("n_entries", "n_iters", "m"))
+def train_codebook(residuals: jnp.ndarray, *, n_entries: int, m: int = 2,
+                   n_iters: int = 10, key: jax.Array | None = None) -> PQCodebook:
+    """Train one k-means codebook per subspace (vmapped Lloyd)."""
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    sub = split_subspaces(residuals, m)                       # (N, S, M)
+    sub = jnp.swapaxes(sub, 0, 1)                             # (S, N, M)
+    keys = jax.random.split(key, sub.shape[0])
+
+    def per_sub(pts, k):
+        st = kmeans(pts, n_clusters=n_entries, n_iters=n_iters, key=k,
+                    chunk=min(16384, pts.shape[0]))
+        return st.centroids
+
+    entries = jax.vmap(per_sub)(sub, keys)                    # (S, E, M)
+    return PQCodebook(entries=entries, entry_sq=jnp.sum(entries * entries, -1))
+
+
+@jax.jit
+def encode(residuals: jnp.ndarray, codebook: PQCodebook) -> jnp.ndarray:
+    """Encode residuals -> codes (N, S) uint8 (nearest entry per subspace)."""
+    sub = split_subspaces(residuals, codebook.sub_dim)        # (N, S, M)
+    sub = jnp.swapaxes(sub, 0, 1)                             # (S, N, M)
+
+    def per_sub(pts, entries):
+        return assign(pts, entries, chunk=min(16384, pts.shape[0]))
+
+    codes = jax.vmap(per_sub)(sub, codebook.entries)          # (S, N)
+    return jnp.swapaxes(codes, 0, 1).astype(jnp.uint8)
+
+
+@jax.jit
+def decode(codes: jnp.ndarray, codebook: PQCodebook) -> jnp.ndarray:
+    """Reconstruct residuals from codes — used by tests/oracles. (N, S*M)."""
+    gathered = jnp.take_along_axis(
+        codebook.entries[None],                               # (1, S, E, M)
+        codes.astype(jnp.int32)[:, :, None, None], axis=2)    # (N, S, 1, M)
+    return gathered[:, :, 0, :].reshape(codes.shape[0], -1)

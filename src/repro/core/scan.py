@@ -1,0 +1,55 @@
+"""Distance-calculation stage (paper Fig. 1 stage D) — reference JAX path.
+
+Two scan flavours over the PQ codes of the selected clusters:
+
+* ``adc_scan``       — exact masked accumulation (JUNO-H): gathers LUT values
+                       per (point, subspace) and sums over subspaces. The
+                       Pallas twin (kernels/pq_scan) maps the gather to a
+                       one-hot · LUT MXU matmul, the TPU analogue of the
+                       paper's Tensor-core A×B(=1) accumulation trick.
+* ``hit_count_scan`` — JUNO-L/M: int8 reward/penalty accumulation, no f32
+                       LUT touch at all (the aggressive approximation §5.4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gather(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut (S, E), codes (P, S) int -> (P, S): out[p, s] = lut[s, codes[p, s]]."""
+    s_idx = jnp.arange(lut.shape[0])[None, :]                   # (1, S)
+    return lut[s_idx, codes.astype(jnp.int32)]                  # (P, S)
+
+
+def adc_scan(lut: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray,
+             *, metric: str = "l2") -> jnp.ndarray:
+    """lut (S, E) f32 (already mask-substituted), codes (P, S) uint8,
+    valid (P,) bool. Returns (P,) scores; invalid slots get +inf / -inf."""
+    vals = _gather(lut, codes)                                  # (P, S)
+    total = jnp.sum(vals, axis=-1)
+    bad = jnp.inf if metric == "l2" else -jnp.inf
+    return jnp.where(valid, total, bad)
+
+
+def hit_count_scan(table: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """table (S, E) int8 hit table, codes (P, S) uint8 -> (P,) int32 score
+    (higher = closer). Invalid slots get a large negative count."""
+    vals = _gather(table.astype(jnp.int32), codes)
+    total = jnp.sum(vals, axis=-1)
+    return jnp.where(valid, total, jnp.int32(-(2 ** 30)))
+
+
+def adc_scan_onehot(lut: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray,
+                    *, metric: str = "l2") -> jnp.ndarray:
+    """MXU-mapped variant: one_hot(codes) (P, S, E) contracted with lut (S, E).
+
+    This is the accumulation the Pallas kernel implements blockwise; exposed
+    here so tests can assert the two formulations agree bit-for-bit.
+    """
+    e = lut.shape[-1]
+    oh = jax.nn.one_hot(codes.astype(jnp.int32), e, dtype=lut.dtype)  # (P,S,E)
+    total = jnp.einsum("pse,se->p", oh, lut)
+    bad = jnp.inf if metric == "l2" else -jnp.inf
+    return jnp.where(valid, total, bad)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for JUNO's compute hot-spots (paper §4.2/§5.3/§5.4):
+
+    selective_lut — fused pairwise-dist + threshold mask + hit table
+                    (the RT-core stage, re-mapped per DESIGN.md §2)
+    pq_scan       — masked ADC accumulation as one-hot·LUT MXU contraction
+                    (the Tensor-core A×B(=1) trick, TPU-native)
+    hit_count     — int8 reward/penalty scan (aggressive approximation)
+    ivf_filter    — fused stage-A filtering distances (the cuBLAS
+                    x^2-2xq^T+q^2 trick, §5.3, MXU-native)
+
+``ops`` holds the jit'd public wrappers (interpret=True off-TPU);
+``ref`` holds the pure-jnp oracles every kernel is tested against.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: hit-count scan (paper §5.4, JUNO-L/M).
+
+score[p] = sum_s table[s, codes[p, s]]  with table in {+1, 0, -1} int8.
+
+This is the aggressive approximation: the f32 LUT is never touched — an int8
+reward/penalty table is contracted against one-hot codes with int32
+accumulation (VPU/MXU int8 path), 4× denser than the exact scan. The TPU
+stand-in for "count ray hits instead of computing distances".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BP = 128
+SLAB = 8
+
+_NEG = -(2 ** 30)  # python int → baked literal (pallas rejects traced consts)
+
+
+def _hit_kernel(table_ref, codes_ref, valid_ref, out_ref, *, n_sub,
+                n_entries):
+    codes = codes_ref[...].astype(jnp.int32)          # (bP, S)
+    table = table_ref[...].astype(jnp.int32)          # (S, E)
+    bp = codes.shape[0]
+
+    acc = jnp.zeros((bp,), jnp.int32)
+    for s0 in range(0, n_sub, SLAB):
+        sl = min(SLAB, n_sub - s0)
+        oh = jax.nn.one_hot(codes[:, s0:s0 + sl], n_entries,
+                            dtype=jnp.int32)          # (bP, sl, E)
+        acc = acc + jax.lax.dot_general(
+            oh.reshape(bp, sl * n_entries),
+            table[s0:s0 + sl, :].reshape(sl * n_entries, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)[:, 0]
+    out_ref[...] = jnp.where(valid_ref[...], acc, _NEG)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def hit_count(table: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray, *,
+              bp: int = DEFAULT_BP, interpret: bool = False) -> jnp.ndarray:
+    """table (S, E) int8, codes (P, S) uint8, valid (P,) bool → (P,) int32."""
+    p, s = codes.shape
+    e = table.shape[1]
+    bp = min(bp, p)
+    pad = (-p) % bp
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+
+    out = pl.pallas_call(
+        functools.partial(_hit_kernel, n_sub=s, n_entries=e),
+        grid=((p + pad) // bp,),
+        in_specs=[
+            pl.BlockSpec((s, e), lambda i: (0, 0)),
+            pl.BlockSpec((bp, s), lambda i: (i, 0)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p + pad,), jnp.int32),
+        interpret=interpret,
+    )(table, codes, valid)
+    return out[:p]

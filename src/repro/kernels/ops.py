@@ -1,0 +1,93 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` — the kernel
+body runs in Python over real blocks, validating BlockSpec tiling and
+semantics. On TPU they compile natively. ``use_pallas()`` picks the backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import hit_count as _hit
+from . import ivf_filter as _filt
+from . import pq_scan as _scan
+from . import selective_lut as _lut
+from . import ref as _ref
+
+
+@functools.cache
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def build_selective_lut(qsub: jnp.ndarray, entries: jnp.ndarray,
+                        entry_sq: jnp.ndarray, tau: jnp.ndarray, *,
+                        metric: str = "l2"):
+    """qsub (..., S, 2) f32, entries (S, E, 2), entry_sq (S, E), tau (..., S).
+    Returns (masked_lut (..., S, E) f32, hit_table (..., S, E) int8).
+    Leading dims are flattened into the kernel's batch axis."""
+    lead = qsub.shape[:-2]
+    s = qsub.shape[-2]
+    b = 1
+    for d in lead:
+        b *= d
+    q0 = qsub[..., 0].reshape(b, s)
+    q1 = qsub[..., 1].reshape(b, s)
+    # pad batch to the block size
+    bb = _lut.DEFAULT_BB
+    pad_b = (-b) % bb
+    if pad_b:
+        q0 = jnp.pad(q0, ((0, pad_b), (0, 0)))
+        q1 = jnp.pad(q1, ((0, pad_b), (0, 0)))
+    tau2 = tau.reshape(b, s)
+    if pad_b:
+        tau2 = jnp.pad(tau2, ((0, pad_b), (0, 0)))
+    bs = _lut.DEFAULT_BS
+    while s % bs:
+        bs //= 2
+    lut, hit = _lut.selective_lut(q0, q1, entries[..., 0], entries[..., 1],
+                                  entry_sq, tau2, metric=metric, bs=bs,
+                                  interpret=_interpret())
+    e = entries.shape[1]
+    lut = lut[:b].reshape(*lead, s, e)
+    hit = hit[:b].reshape(*lead, s, e)
+    return lut, hit
+
+
+def masked_adc_scan(lut: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray,
+                    *, metric: str = "l2") -> jnp.ndarray:
+    """lut (..., S, E), codes (..., P, S), valid (..., P) → (..., P) f32."""
+    lead = codes.shape[:-2]
+    if not lead:
+        return _scan.pq_scan(lut, codes, valid, metric=metric,
+                             interpret=_interpret())
+    fn = functools.partial(_scan.pq_scan, metric=metric,
+                           interpret=_interpret())
+    for _ in lead:
+        fn = jax.vmap(fn)
+    return fn(lut, codes, valid)
+
+
+def hit_count_scan(table: jnp.ndarray, codes: jnp.ndarray,
+                   valid: jnp.ndarray) -> jnp.ndarray:
+    """table (..., S, E) int8, codes (..., P, S), valid (..., P) → int32."""
+    lead = codes.shape[:-2]
+    if not lead:
+        return _hit.hit_count(table, codes, valid, interpret=_interpret())
+    fn = functools.partial(_hit.hit_count, interpret=_interpret())
+    for _ in lead:
+        fn = jax.vmap(fn)
+    return fn(table, codes, valid)
+
+
+def filter_scores(queries, centroids, centroid_sq, *, metric="l2"):
+    """Fused IVF filtering distance matrix (paper stage A on the MXU)."""
+    return _filt.ivf_filter(queries, centroids, centroid_sq, metric=metric,
+                            interpret=_interpret())

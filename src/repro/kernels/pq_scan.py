@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: masked ADC scan (paper Fig. 1 stage D, JUNO-H).
+
+Accumulates per-point total distance from the masked LUT:
+    total[p] = sum_s lut[s, codes[p, s]]
+
+TPU mapping: the per-(point, subspace) gather is expressed as a one-hot
+contraction  one_hot(codes) (bP, S, E) · lut (S, E) → (bP,)  which XLA lowers
+onto the MXU — the direct TPU analogue of the paper's Tensor-core
+"A × B(=ones)" accumulation trick (§5.3): the quantized codes choose MXU
+operand rows instead of driving scalar lookups.
+
+Grid: (P/bP,). LUT stays VMEM-resident across all point blocks (constant
+index map), codes stream through. VMEM ≈ bP*S*E (one-hot, f32) — the one-hot
+is formed per 8-subspace slab to stay within budget at bP=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BP = 128   # points per program
+SLAB = 8           # subspaces one-hot-expanded at a time (VMEM control)
+
+
+def _scan_kernel(lut_ref, codes_ref, valid_ref, out_ref, *, n_sub, n_entries,
+                 bad_value):
+    codes = codes_ref[...].astype(jnp.int32)          # (bP, S)
+    lut = lut_ref[...]                                # (S, E)
+    bp = codes.shape[0]
+
+    acc = jnp.zeros((bp,), jnp.float32)
+    # slab over subspaces: one_hot (bP, SLAB, E) · lut_slab (SLAB, E) on MXU
+    for s0 in range(0, n_sub, SLAB):
+        sl = min(SLAB, n_sub - s0)
+        oh = jax.nn.one_hot(codes[:, s0:s0 + sl], n_entries,
+                            dtype=jnp.float32)        # (bP, sl, E)
+        acc = acc + jax.lax.dot_general(
+            oh.reshape(bp, sl * n_entries),
+            lut[s0:s0 + sl, :].reshape(sl * n_entries, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+    valid = valid_ref[...]
+    out_ref[...] = jnp.where(valid, acc, bad_value)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bp", "interpret"))
+def pq_scan(lut: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray, *,
+            metric: str = "l2", bp: int = DEFAULT_BP,
+            interpret: bool = False) -> jnp.ndarray:
+    """lut (S, E) f32 (pre-masked), codes (P, S) uint8, valid (P,) bool.
+    Returns (P,) f32 total scores; invalid slots get ±inf."""
+    p, s = codes.shape
+    e = lut.shape[1]
+    bp = min(bp, p)
+    pad = (-p) % bp
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    bad = float("inf") if metric == "l2" else float("-inf")
+
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, n_sub=s, n_entries=e, bad_value=bad),
+        grid=((p + pad) // bp,),
+        in_specs=[
+            pl.BlockSpec((s, e), lambda i: (0, 0)),   # LUT resident
+            pl.BlockSpec((bp, s), lambda i: (i, 0)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p + pad,), jnp.float32),
+        interpret=interpret,
+    )(lut, codes, valid)
+    return out[:p]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the semantics of record).
+
+Each function mirrors one kernel's contract exactly; kernel tests sweep
+shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_lut_ref(q0, q1, e0, e1, esq, tau, *, metric="l2"):
+    """(B,S),(B,S),(S,E),(S,E),(S,E),(B,S) → lut (B,S,E) f32, hit (B,S,E) i8."""
+    dot = q0[:, :, None] * e0[None] + q1[:, :, None] * e1[None]
+    tau_sq = (tau * tau)[:, :, None]
+    if metric == "l2":
+        r_sq = (q0 * q0 + q1 * q1)[:, :, None]
+        dist = r_sq - 2.0 * dot + esq[None]
+        outer = dist <= tau_sq
+        inner = dist <= 0.25 * tau_sq
+        lut = jnp.where(outer, dist, tau_sq)
+    else:
+        t = esq[None] - 2.0 * dot
+        outer = t <= tau_sq
+        inner = t <= 0.25 * tau_sq
+        lut = jnp.where(outer, dot, -0.5 * tau_sq)
+    hit = inner.astype(jnp.int8) - (~outer).astype(jnp.int8)
+    return lut.astype(jnp.float32), hit
+
+
+def pq_scan_ref(lut, codes, valid, *, metric="l2"):
+    """lut (S,E) f32, codes (P,S) uint8, valid (P,) → (P,) f32."""
+    s_idx = jnp.arange(lut.shape[0])[None, :]
+    vals = lut[s_idx, codes.astype(jnp.int32)]
+    total = jnp.sum(vals.astype(jnp.float32), axis=-1)
+    bad = jnp.inf if metric == "l2" else -jnp.inf
+    return jnp.where(valid, total, bad)
+
+
+def hit_count_ref(table, codes, valid):
+    """table (S,E) int8, codes (P,S) uint8, valid (P,) → (P,) int32."""
+    s_idx = jnp.arange(table.shape[0])[None, :]
+    vals = table[s_idx, codes.astype(jnp.int32)].astype(jnp.int32)
+    total = jnp.sum(vals, axis=-1)
+    return jnp.where(valid, total, jnp.int32(-(2 ** 30)))
+
+
+def ivf_filter_ref(queries, centroids, centroid_sq, *, metric="l2"):
+    """(Q,D),(C,D),(C,) → (Q,C): csq - 2 q·c (l2, rank-equivalent) or q·c."""
+    dots = queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    if metric == "l2":
+        return centroid_sq[None, :].astype(jnp.float32) - 2.0 * dots
+    return dots

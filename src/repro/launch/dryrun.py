@@ -1,0 +1,461 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run (task deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(*abstract_inputs).compile()
+on the production meshes — (16,16) single-pod and (2,16,16) multi-pod —
+recording memory_analysis(), cost_analysis() and the collective schedule
+parsed from the optimized HLO. No arrays are ever allocated
+(ShapeDtypeStruct stand-ins throughout).
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4_mini_3_8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--outdir experiments/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist import sharding as act_sharding
+from repro.launch import analytic, hlo_analysis
+from repro.launch.mesh import (batch_axes, make_production_mesh,
+                               named_sharding, normalize_pspec)
+from repro.launch.shapes import SHAPES, applicable
+from repro.models import get_model
+from repro.models.params import Spec, tree_map_specs
+from repro.train import TrainConfig, TrainState, make_train_step
+from repro.train.optimizer import opt_state_schema
+
+
+def _structs(schema):
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                          schema)
+
+
+def _shardings(schema, mesh):
+    return tree_map_specs(
+        lambda s: named_sharding(mesh, s.pspec, s.shape), schema)
+
+
+def _bytes_of(shape, dtype) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * jnp.dtype(dtype).itemsize
+
+
+def total_bytes(schema) -> int:
+    return sum(_bytes_of(s.shape, s.dtype) for s in
+               jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, Spec)))
+
+
+def analytic_bytes_per_chip(schema, mesh) -> int:
+    """Exact per-chip residency of a Spec tree under its shardings."""
+    total = 0
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for s in jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, Spec)):
+        spec = normalize_pspec(s.pspec, mesh, s.shape)
+        shards = 1
+        for entry in spec:
+            names = entry if isinstance(entry, tuple) else (
+                () if entry is None else (entry,))
+            for n in names:
+                shards *= sizes[n]
+        total += _bytes_of(s.shape, s.dtype) // shards
+    return total
+
+
+def _model_flops(cfg, schema, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference) with MoE active-expert scaling."""
+    from repro.models.params import n_params as count
+
+    def leaf_count(tree):
+        total, active = 0, 0
+        for path, s in jax.tree.flatten_with_path(
+                tree, is_leaf=lambda x: isinstance(x, Spec))[0]:
+            n = 1
+            for d in s.shape:
+                n *= d
+            total += n
+            keys = [getattr(k, "key", str(k)) for k in path]
+            if cfg.moe and any(k in ("w_gate", "w_in", "w_out") for k in keys) \
+                    and len(s.shape) >= 3 and s.shape[-3] == cfg.moe.n_experts:
+                active += n * cfg.moe.top_k / cfg.moe.n_experts
+            else:
+                active += n
+        return total, active
+
+    total, active = leaf_count(schema)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch          # decode: 1 token
+
+
+def lower_juno_cell(multi_pod: bool) -> dict:
+    """The paper's own system at pod scale: distributed JUNO search over a
+    100M-point index (deep-like: D=96, C=65536, E=256, S=48), clusters
+    sharded over all chips, JUNO-H2 mode. Abstract index — no allocation."""
+    import numpy as _np
+    from repro.core.density import DensityModel
+    from repro.core.ivf import IVFIndex
+    from repro.core.juno import JunoIndexData
+    from repro.core.pq import PQCodebook
+    from repro.dist.distributed_index import (index_pspecs,
+                                              make_distributed_search)
+
+    n, d, c, e, s, g = 100_000_000, 96, 65_536, 256, 48, 64
+    p_cap = 6144            # 4× mean cluster size, padded layout
+    nq, k = 128, 100
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    f32, i32, u8 = jnp.float32, jnp.int32, jnp.uint8
+    index_structs = JunoIndexData(
+        ivf=IVFIndex(
+            centroids=jax.ShapeDtypeStruct((c, d), f32),
+            centroid_sq=jax.ShapeDtypeStruct((c,), f32),
+            point_ids=jax.ShapeDtypeStruct((c, p_cap), i32),
+            valid=jax.ShapeDtypeStruct((c, p_cap), jnp.bool_),
+            labels=jax.ShapeDtypeStruct((n,), i32)),
+        codebook=PQCodebook(
+            entries=jax.ShapeDtypeStruct((s, e, 2), f32),
+            entry_sq=jax.ShapeDtypeStruct((s, e), f32)),
+        codes=jax.ShapeDtypeStruct((1, s), u8),     # unused at serve time
+        cluster_codes=jax.ShapeDtypeStruct((c, p_cap, s), u8),
+        density=DensityModel(
+            grid=jax.ShapeDtypeStruct((s, g, g), f32),
+            lo=jax.ShapeDtypeStruct((s, 2), f32),
+            hi=jax.ShapeDtypeStruct((s, 2), f32),
+            coeffs=jax.ShapeDtypeStruct((3,), f32),
+            tau_min=jax.ShapeDtypeStruct((), f32),
+            tau_max=jax.ShapeDtypeStruct((), f32)),
+        points_sq=jax.ShapeDtypeStruct((1,), f32))
+
+    result = {"arch": "juno_ann_100m", "shape": "serve_q128",
+              "mesh": "multi" if multi_pod else "single",
+              "n_chips": n_chips, "status": "ok"}
+    t0 = time.time()
+    try:
+        with mesh:
+            dsearch = make_distributed_search(mesh, local_nprobe=2, k=k,
+                                              mode="H2", impl="ref")
+            lowered = dsearch.lower(
+                index_structs, jax.ShapeDtypeStruct((nq, d), f32))
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        colls = hlo_analysis.parse_collectives(hlo)
+        summary = hlo_analysis.collective_summary(colls)
+        # analytic per-chip flops: filtering GEMM + selective LUT + int8
+        # hit scan (÷4 MXU density) + f32 rerank, local shard sizes
+        c_loc, probes = c / n_chips, 2
+        lut_fl = probes * s * e * 8 * nq
+        scan_i8 = probes * p_cap * s * 2 * nq / 4
+        rerank_fl = 400 * s * 2 * nq
+        filt_fl = 2 * c_loc * d * nq
+        flops = filt_fl + lut_fl + scan_i8 + rerank_fl
+        hbm = (c_loc * p_cap * s            # local codes streamed once (u8)
+               + c_loc * d * 4 + nq * d * 4)
+        terms = hlo_analysis.roofline_terms(
+            flops, hbm, summary["total_link_bytes_per_chip"], n_chips)
+        result.update({
+            "compile_s": round(time.time() - t0, 1),
+            "raw_cost_flops": float((cost or {}).get("flops", 0.0)),
+            "analytic_flops_per_chip": flops,
+            "analytic_hbm_bytes_per_chip": hbm,
+            "collectives": summary, "roofline": terms,
+            "memory_analysis": _mem_dict(mem),
+            "useful_flop_ratio": 1.0,
+            "model_flops_per_chip": flops,
+        })
+    except Exception as e:
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+    return result
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               juno_attention: bool = False, sp: bool = False) -> dict:
+    if arch == "juno_ann":
+        return lower_juno_cell(multi_pod)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok and not juno_attention:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = get_model(cfg)
+    # per-arch SP policy: the cross-attention group-scan interacts badly
+    # with the SP schedule (measured 3.2x WORSE on vision-90b train —
+    # §Perf notes), so SP is auto-disabled for cross-attn architectures.
+    sp = sp and cfg.cross_attn_period == 0
+    act_sharding.enable(batch_axes(mesh), sp=sp, mesh=mesh)
+
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "multi" if multi_pod else "single",
+              "n_chips": n_chips, "status": "ok", "sp": sp}
+    try:
+        with mesh:
+            if shape.kind == "train":
+                lowered, residency = _lower_train(model, shape, mesh)
+            elif shape.kind == "prefill":
+                lowered, residency = _lower_prefill(model, shape, mesh)
+            else:
+                lowered, residency = _lower_decode(model, shape, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+
+        colls = hlo_analysis.parse_collectives(hlo)
+        summary = hlo_analysis.collective_summary(colls)
+        raw_flops = float((cost or {}).get("flops", 0.0))
+        raw_bytes = float((cost or {}).get("bytes accessed", 0.0))
+        loop_corr = hlo_analysis.loop_correction_factor(hlo)
+
+        # analytic compute/memory terms (cost_analysis counts loop bodies
+        # once — see hlo_analysis.py); collectives are HLO-exact.
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        sch_bytes = total_bytes(model.schema)
+        cache_bytes = 0
+        if shape.kind != "train":
+            cache_bytes = total_bytes(model.cache_schema(
+                shape.global_batch, shape.seq_len))
+        flops = analytic.step_flops_per_chip(cfg, shape, n_chips)
+        hbm = analytic.step_bytes_per_chip(cfg, shape, n_chips, sch_bytes,
+                                           cache_bytes, tp=tp)
+        terms = hlo_analysis.roofline_terms(
+            flops, hbm, summary["total_link_bytes_per_chip"], n_chips)
+        model_fl = _model_flops(cfg, model.schema, shape)
+
+        result.update({
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "raw_cost_flops": raw_flops,
+            "raw_cost_bytes": raw_bytes,
+            "hlo_loop_correction": round(loop_corr, 1),
+            "analytic_flops_per_chip": flops,
+            "analytic_hbm_bytes_per_chip": hbm,
+            "collectives": summary,
+            "roofline": terms,
+            "model_flops_total": model_fl,
+            "model_flops_per_chip": model_fl / n_chips,
+            "useful_flop_ratio": (model_fl / n_chips) / flops if flops else 0,
+            "analytic_state_bytes_per_chip": residency,
+            "memory_analysis": _mem_dict(mem),
+        })
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+    finally:
+        act_sharding.disable()
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _lower_train(model, shape, mesh):
+    grad_pspecs = tree_map_specs(
+        lambda s: normalize_pspec(s.pspec, mesh, s.shape), model.schema)
+    tstep = make_train_step(model, TrainConfig(), grad_pspecs=grad_pspecs)
+    state_schema = TrainState(params=model.schema,
+                              opt=opt_state_schema(model.schema))
+    per_pod_batch = shape.global_batch
+    batch_schema = model.batch_schema(per_pod_batch, shape.seq_len)
+
+    state_sh = _shardings(state_schema, mesh)
+    batch_sh = _shardings(batch_schema, mesh)
+    fn = jax.jit(tstep, in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, None))
+    lowered = fn.lower(_structs(state_schema), _structs(batch_schema))
+    residency = analytic_bytes_per_chip(state_schema, mesh)
+    return lowered, residency
+
+
+def _lower_prefill(model, shape, mesh):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    batch_schema = model.batch_schema(shape.global_batch, shape.seq_len)
+    cache_schema = model.cache_schema(shape.global_batch, shape.seq_len)
+    if model.cfg.encoder_decoder:
+        # prefill_32k stresses the ENCODER: frames length = shape.seq_len
+        batch_schema = dict(batch_schema)
+        batch_schema["frames"] = Spec(
+            (shape.global_batch, shape.seq_len, model.cfg.d_model),
+            P(("pod", "data"), None, None), "normal", model.cfg.dtype)
+        batch_schema["tokens"] = Spec((shape.global_batch, 64),
+                                      P(("pod", "data"), None), "zeros",
+                                      jnp.int32)
+        del batch_schema["targets"]
+        cache_schema = model.cache_schema(shape.global_batch, 4096)
+    else:
+        batch_schema = {k: v for k, v in batch_schema.items()
+                        if k != "targets"}
+
+    p_sh = _shardings(model.schema, mesh)
+    b_sh = _shardings(batch_schema, mesh)
+    c_sh = _shardings(cache_schema, mesh)
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh, c_sh),
+                 out_shardings=(None, c_sh))
+    lowered = fn.lower(_structs(model.schema), _structs(batch_schema),
+                       _structs(cache_schema))
+    residency = (analytic_bytes_per_chip(model.schema, mesh)
+                 + analytic_bytes_per_chip(cache_schema, mesh))
+    return lowered, residency
+
+
+def _serving_schema(model, max_tp_resident_gb: float = 6.0):
+    """Serving layout (§Perf decode iterations 2-3):
+    * params are bf16 (inference checkpoints) — halves gather traffic;
+    * FSDP is a TRAINING artifact: if the pure-TP residency (params/16)
+      fits comfortably, drop the "data" axis from weight shardings so decode
+      performs ZERO per-step weight gathers (weights stay resident).
+      Large models (mistral-123b, vision-90b) keep the 2D layout."""
+    tp_resident = total_bytes(model.schema) / 4 * 2 / 16   # bf16 over TP=16
+    drop_data = tp_resident <= max_tp_resident_gb * 1e9
+
+    def one(s):
+        dtype = jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+        spec = s.pspec
+        if drop_data:
+            entries = []
+            for e in spec:
+                if e == "data":
+                    entries.append(None)
+                elif isinstance(e, tuple):
+                    kept = tuple(a for a in e if a != "data")
+                    entries.append(kept if kept else None)
+                else:
+                    entries.append(e)
+            spec = P(*entries)
+        return Spec(s.shape, spec, s.init, dtype)
+
+    return tree_map_specs(one, model.schema)
+
+
+def _lower_decode(model, shape, mesh):
+    def serve_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+
+    serving_schema = _serving_schema(model)
+    cache_schema = model.cache_schema(shape.global_batch, shape.seq_len)
+    token_schema = Spec((shape.global_batch, 1), P(("pod", "data"), None),
+                        "zeros", jnp.int32)
+
+    p_sh = _shardings(serving_schema, mesh)
+    c_sh = _shardings(cache_schema, mesh)
+    t_sh = named_sharding(mesh, token_schema.pspec, token_schema.shape)
+    pos_sh = named_sharding(mesh, P(("pod", "data")), (shape.global_batch,))
+    fn = jax.jit(serve_step, in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+                 out_shardings=(None, c_sh))
+    lowered = fn.lower(_structs(serving_schema), _structs(cache_schema),
+                       jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                            jnp.int32),
+                       jax.ShapeDtypeStruct((shape.global_batch,),
+                                            jnp.int32))
+    residency = (analytic_bytes_per_chip(serving_schema, mesh)
+                 + analytic_bytes_per_chip(cache_schema, mesh))
+    return lowered, residency
+
+
+def input_specs(arch: str, shape_name: str = "train_4k") -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell — the
+    public hook the task spec asks for."""
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return _structs(model.batch_schema(shape.global_batch, shape.seq_len))
+    if shape.kind == "prefill":
+        b = model.batch_schema(shape.global_batch, shape.seq_len)
+        return _structs({k: v for k, v in b.items() if k != "targets"})
+    return {"token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel optimized variant (§Perf)")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    n_bad = 0
+    for arch, shape, multi in cells:
+        tag = f"{arch}_{shape}_{'multi' if multi else 'single'}"
+        path = os.path.join(args.outdir, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                prev = json.load(f)
+            print(f"[cache] {tag}: {prev['status']}")
+            n_bad += prev["status"] == "error"
+            continue
+        t0 = time.time()
+        res = lower_cell(arch, shape, multi, sp=args.sp)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        n_bad += res["status"] == "error"
+        extra = ""
+        if res["status"] == "ok":
+            r = res["roofline"]
+            extra = (f" dominant={r['dominant']}"
+                     f" c/m/coll={r['compute_s']:.2e}/{r['memory_s']:.2e}"
+                     f"/{r['collective_s']:.2e}s"
+                     f" useful={res['useful_flop_ratio']:.2f}")
+        elif res["status"] == "error":
+            extra = " " + res["error"][:160]
+        print(f"[{res['status']}] {tag} ({time.time() - t0:.0f}s){extra}",
+              flush=True)
+    print(f"done; {n_bad} errors")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

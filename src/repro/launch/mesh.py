@@ -1,0 +1,52 @@
+"""Production mesh construction. A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes of this mesh ("pod" composes with "data")."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def normalize_pspec(spec: P, mesh: Mesh, shape: tuple | None = None) -> P:
+    """Adapt a canonical PartitionSpec to a concrete mesh:
+    * drop axis names the mesh doesn't have (e.g. "pod" on the single-pod mesh)
+    * drop axes whose dim size isn't divisible by the axis size (e.g. a
+      batch=1 long-context cell can't shard its batch dim)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        names = entry if isinstance(entry, tuple) else (
+            () if entry is None else (entry,))
+        names = tuple(n for n in names if n in sizes)
+        if shape is not None and names:
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            if shape[i] % total != 0:
+                # greedily drop trailing axes until divisible
+                while names:
+                    total = 1
+                    for n in names:
+                        total *= sizes[n]
+                    if shape[i] % total == 0:
+                        break
+                    names = names[:-1]
+        out.append(names if len(names) != 1 else names[0])
+        if out[-1] == ():
+            out[-1] = None
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, spec: P, shape: tuple | None = None
+                   ) -> NamedSharding:
+    return NamedSharding(mesh, normalize_pspec(spec, mesh, shape))

@@ -1,0 +1,77 @@
+"""Training driver: end-to-end runnable on this CPU container (smoke
+configs) and mesh-shaped for the pod (full configs).
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi4_mini_3_8b \
+        --smoke --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.tokens import make_batch
+from repro.dist import checkpoint as ckpt_lib
+from repro.dist.fault_tolerance import StepWatchdog
+from repro.models import get_model
+from repro.train import (AdamWConfig, TrainConfig, TrainState,
+                         init_train_state, make_train_step)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="phi4_mini_3_8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=args.lr, warmup_steps=10),
+                       accum_steps=args.accum, grad_dtype=args.grad_dtype)
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=0)
+
+    state = init_train_state(model, jax.random.PRNGKey(args.seed))
+    start = 0
+    if args.resume and args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir):
+        state, start = ckpt_lib.restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    watchdog = StepWatchdog()
+    losses = []
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = make_batch(cfg, batch=args.batch, seq=args.seq, step=step,
+                           seed=args.seed)
+        state, metrics = step_fn(state, batch)
+        dt = time.time() - t0
+        status = watchdog.check(dt)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        print(f"step {step:5d} loss {loss:.4f} "
+              f"gnorm {float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms"
+              + (f" [{status}]" if status != "ok" else ""), flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt_lib.save(args.ckpt_dir, step + 1, state)
+    if args.ckpt_dir:
+        ckpt_lib.save(args.ckpt_dir, args.steps, state)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

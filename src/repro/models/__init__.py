@@ -1,0 +1,2 @@
+from .api import ModelAPI, get_model  # noqa: F401
+from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig  # noqa: F401

@@ -1,0 +1,111 @@
+"""Family-dispatch API: one entry point per model kind.
+
+``get_model(cfg)`` returns a ModelAPI whose five callables hide the family
+differences (decoder-only / enc-dec / VLM) from the training loop, the
+serving loop and the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer, whisper
+from .config import ModelConfig
+from .params import Spec
+
+
+class ModelAPI(NamedTuple):
+    cfg: ModelConfig
+    schema: dict                       # param Spec tree
+    cache_schema: Callable             # (batch, max_seq) -> Spec tree
+    batch_schema: Callable             # (batch, seq) -> Spec tree (inputs)
+    loss: Callable                     # (params, batch) -> scalar loss
+    prefill: Callable                  # (params, batch, cache) -> (logits, cache)
+    decode: Callable                   # (params, cache, token, pos) -> (logits, cache)
+
+
+def _xent(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy. logits (B, T, V) f32, targets (B, T)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+_BATCH_P = P(("pod", "data"))
+
+
+def _token_batch_schema(cfg: ModelConfig):
+    def make(batch: int, seq: int) -> dict:
+        sch = {
+            "tokens": Spec((batch, seq), P(("pod", "data"), None), "zeros",
+                           jnp.int32),
+            "targets": Spec((batch, seq), P(("pod", "data"), None), "zeros",
+                            jnp.int32),
+        }
+        if cfg.encoder_decoder:
+            sch["frames"] = Spec((batch, cfg.n_context_tokens, cfg.d_model),
+                                 P(("pod", "data"), None, None), "normal",
+                                 cfg.dtype)
+        elif cfg.cross_attn_period:
+            sch["context"] = Spec((batch, cfg.n_context_tokens, cfg.d_model),
+                                  P(("pod", "data"), None, None), "normal",
+                                  cfg.dtype)
+        return sch
+    return make
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.encoder_decoder:
+        return _whisper_api(cfg)
+    return _decoder_api(cfg)
+
+
+def _decoder_api(cfg: ModelConfig) -> ModelAPI:
+    schema = transformer.model_schema(cfg)
+
+    def loss(params, batch):
+        ctx = batch.get("context")
+        x = transformer.forward(cfg, params, batch["tokens"], context=ctx)
+        logits = transformer.lm_logits(cfg, params, x)
+        return _xent(logits, batch["targets"])
+
+    def prefill_fn(params, batch, cache):
+        ctx = batch.get("context")
+        return transformer.prefill(cfg, params, batch["tokens"], cache,
+                                   context=ctx)
+
+    def decode_fn(params, cache, token, pos):
+        return transformer.decode(cfg, params, cache, token, pos)
+
+    return ModelAPI(
+        cfg=cfg, schema=schema,
+        cache_schema=lambda b, s: transformer.init_cache_schema(cfg, b, s),
+        batch_schema=_token_batch_schema(cfg),
+        loss=loss, prefill=prefill_fn, decode=decode_fn)
+
+
+def _whisper_api(cfg: ModelConfig) -> ModelAPI:
+    schema = whisper.model_schema(cfg)
+
+    def loss(params, batch):
+        enc = whisper.encode(cfg, params, batch["frames"])
+        x = whisper.decoder_forward(cfg, params, batch["tokens"], enc)
+        logits = transformer.lm_logits(cfg, params, x)
+        return _xent(logits, batch["targets"])
+
+    def prefill_fn(params, batch, cache):
+        return whisper.prefill(cfg, params, batch["frames"],
+                               batch["tokens"], cache)
+
+    def decode_fn(params, cache, token, pos):
+        return whisper.decode(cfg, params, cache, token, pos)
+
+    return ModelAPI(
+        cfg=cfg, schema=schema,
+        cache_schema=lambda b, s: whisper.init_cache_schema(
+            cfg, b, s, cfg.n_context_tokens),
+        batch_schema=_token_batch_schema(cfg),
+        loss=loss, prefill=prefill_fn, decode=decode_fn)

@@ -1,0 +1,121 @@
+"""JUNO-attention: the paper's ANN machinery applied to decode-time
+attention (beyond-paper; motivated by the paper's own §6.5 Llama experiment).
+
+Attention IS maximum-inner-product search: query vectors search the cached
+keys. We PQ-encode the keys per head (2-D subspaces, exactly the paper's
+geometry), score all positions with the IP-LUT scan — reading S·(hd/2)
+uint8 code bytes instead of S·hd·2 bf16 key bytes, a 4× cut of the
+memory-bound decode traffic — then attend EXACTLY over the top-C positions.
+
+This is the H2 two-stage idea transplanted into the KV cache: approximate
+scan → static top-C → exact rerank. Quality knob: C (tokens attended).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans
+from repro.core.pq import split_subspaces
+
+
+class KVIndex(NamedTuple):
+    entries: jnp.ndarray    # (H, S_sub, E, 2) f32 — per-head codebooks
+    codes: jnp.ndarray      # (B, H, S, S_sub) uint8 — encoded keys
+
+
+@functools.partial(jax.jit, static_argnames=("n_entries",))
+def build_kv_index(k_cache: jnp.ndarray, *, n_entries: int = 16,
+                   key: jax.Array | None = None) -> KVIndex:
+    """k_cache (B, S, KVH, hd) → per-head PQ index over the cached keys.
+    Built once at prefill; decode appends via ``encode_step``."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    b, s, h, hd = k_cache.shape
+    ks = k_cache.astype(jnp.float32).transpose(2, 0, 1, 3).reshape(h, b * s,
+                                                                   hd)
+
+    def per_head(pts, kk):
+        sub = split_subspaces(pts, 2)                  # (N, S_sub, 2)
+        sub = jnp.swapaxes(sub, 0, 1)                  # (S_sub, N, 2)
+        cents = jax.vmap(lambda p, k2: kmeans(
+            p, n_clusters=n_entries, n_iters=4, key=k2,
+            chunk=min(4096, p.shape[0])).centroids)(
+            sub, jax.random.split(kk, sub.shape[0]))
+        return cents                                   # (S_sub, E, 2)
+
+    entries = jax.vmap(per_head)(ks, jax.random.split(key, h))
+    codes = _encode(k_cache, entries)
+    return KVIndex(entries=entries, codes=codes)
+
+
+def _encode(k_cache, entries):
+    """k (B, S, H, hd), entries (H, S_sub, E, 2) → codes (B, H, S, S_sub)."""
+    b, s, h, hd = k_cache.shape
+    sub = k_cache.astype(jnp.float32).reshape(b, s, h, hd // 2, 2)
+    sub = sub.transpose(0, 2, 1, 3, 4)                 # (B, H, S, S_sub, 2)
+    d = jnp.sum((sub[:, :, :, :, None, :]
+                 - entries[None, :, None]) ** 2, -1)   # (B,H,S,S_sub,E)
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def encode_step(index: KVIndex, k_new: jnp.ndarray, pos) -> KVIndex:
+    """Append one token's key codes at per-batch positions pos (B,)."""
+    new_codes = _encode(k_new, index.entries)          # (B, H, 1, S_sub)
+
+    def upd(c, u, p):
+        return jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+
+    codes = jax.vmap(upd)(index.codes, new_codes, pos)
+    return index._replace(codes=codes)
+
+
+@functools.partial(jax.jit, static_argnames=("top_c",))
+def juno_decode_attention(q: jnp.ndarray, index: KVIndex,
+                          k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                          pos, *, top_c: int = 128) -> jnp.ndarray:
+    """q (B, 1, H, hd) (post-rope), caches (B, S, KVH, hd), pos (B,).
+    GQA: q heads grouped onto KVH codebooks. Returns (B, 1, H, hd)."""
+    b, _, hq, hd = q.shape
+    _, s, h, _ = k_cache.shape
+    g = hq // h
+    qg = q[:, 0].reshape(b, h, g, hd)
+
+    # stage 1: approximate IP via LUT scan over codes (uint8 traffic only)
+    qsub = qg.astype(jnp.float32).reshape(b, h, g, hd // 2, 2)
+    lut = jnp.einsum("bhgsm,hsem->bhgse", qsub, index.entries)  # (B,H,G,S_sub,E)
+    s_idx = jnp.arange(hd // 2)[None, None, None, :]
+    codes = index.codes.astype(jnp.int32)                       # (B,H,S,S_sub)
+    gathered = jnp.take_along_axis(
+        lut[:, :, :, None],                                     # (B,H,G,1,S_sub,E)
+        codes[:, :, None, :, :, None], axis=-1)[..., 0]         # (B,H,G,S,S_sub)
+    approx = jnp.sum(gathered, -1)                              # (B,H,G,S)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]              # (B,S)
+    approx = jnp.where(valid[:, None, None], approx, -jnp.inf)
+
+    # stage 2: exact attention over the per-head top-C positions
+    c = min(top_c, s)
+    _, top_idx = jax.lax.top_k(approx, c)                       # (B,H,G,C)
+    bi = jnp.arange(b)[:, None, None, None]
+    hi = jnp.arange(h)[None, :, None, None]
+    k_sel = k_cache.transpose(0, 2, 1, 3)[bi, hi, top_idx]      # (B,H,G,C,hd)
+    v_sel = v_cache.transpose(0, 2, 1, 3)[bi, hi, top_idx]
+    scores = jnp.einsum("bhgd,bhgcd->bhgc", qg, k_sel
+                        ).astype(jnp.float32) / (hd ** 0.5)
+    sel_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid[:, None, None], approx.shape), top_idx, -1)
+    scores = jnp.where(sel_valid, scores, -1e30)
+    w = jax.nn.softmax(scores, -1).astype(v_sel.dtype)
+    o = jnp.einsum("bhgc,bhgcd->bhgd", w, v_sel)
+    return o.reshape(b, 1, hq, hd)
+
+
+def traffic_model(s: int, hd: int, top_c: int) -> dict:
+    """Decode-attention HBM bytes per (head, step): exact vs JUNO."""
+    exact = s * hd * 2 * 2                      # K and V, bf16
+    juno = s * (hd // 2) + top_c * hd * 2 * 2   # uint8 codes + exact top-C
+    return {"exact_bytes": exact, "juno_bytes": juno,
+            "reduction_x": exact / juno}

@@ -1,0 +1,179 @@
+"""Mamba-2 mixer via state-space duality (SSD, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm (quadratic within chunks,
+linear recurrence across chunks); decode is the O(1) per-token recurrence on
+the (H, P, N) state. Heads are sharded over the "model" axis (head-parallel
+SSM) and the depthwise conv keeps a (W-1)-deep state for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig, SSMConfig
+from .layers import rms_norm
+from .params import Spec
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba_schema(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    return {
+        "w_z":   Spec((d, d_in), P("data", "model")),
+        "w_x":   Spec((d, d_in), P("data", "model")),
+        "w_B":   Spec((d, gn), P("data", None)),
+        "w_C":   Spec((d, gn), P("data", None)),
+        "w_dt":  Spec((d, nh), P("data", None)),
+        "dt_bias": Spec((nh,), P(None), "zeros"),
+        "A_log": Spec((nh,), P(None), "zeros"),
+        "D":     Spec((nh,), P(None), "ones"),
+        "conv_w": Spec((s.conv_width, conv_dim), P(None, "model")),
+        "norm_w": Spec((d_in,), P("model"), "ones"),
+        "w_out": Spec((d_in, d), P("model", "data")),
+    }
+
+
+def _segsum(x):
+    """x (..., L) → (..., L, L): cumulative sums over segments (i >= j)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]       # sum over (j, i]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int, init_state=None):
+    """SSD scan. x (B,T,H,Pd); dt (B,T,H); a (H,) negative; b,c (B,T,G,N).
+    Returns (y (B,T,H,Pd), final_state (B,H,Pd,N))."""
+    bsz, t, h, pd = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (t + pad) // chunk
+    xc = x.reshape(bsz, nc, chunk, h, pd)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+    bh = jnp.repeat(bc, rep, axis=3)                 # (B,nc,L,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    da = (dtc * a[None, None, None, :]).astype(jnp.float32)   # (B,nc,L,H)
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # --- intra-chunk (quadratic, attention-like with decay kernel) -------
+    ll = jnp.exp(_segsum(da.swapaxes(2, 3)))         # (B,nc,H,L,L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", ch, bh).astype(jnp.float32)
+    y_diag = jnp.einsum("bchls,bchls,bcsh,bcshp->bclhp",
+                        scores, ll, dtc.astype(jnp.float32),
+                        xc.astype(jnp.float32))
+
+    # --- chunk boundary states -------------------------------------------
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)       # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclh,bclhp->bchpn",
+                        bh.astype(jnp.float32), decay_states,
+                        dtc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                 # (B,nc,H)
+
+    def rec(s_prev, xs):
+        st, dec = xs                                          # (B,H,Pd,N),(B,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    init = (jnp.zeros((bsz, h, pd, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, s_prevs = jax.lax.scan(
+        rec, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                          # (B,nc,H,Pd,N)
+
+    # --- inter-chunk contribution ----------------------------------------
+    out_decay = jnp.exp(da_cs)                                # (B,nc,L,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       ch.astype(jnp.float32), s_prevs, out_decay)
+
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, pd)[:, :t]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, a, b, c):
+    """One-token recurrence. state (B,H,Pd,N); x (B,H,Pd); dt (B,H);
+    b,c (B,G,N) → (y (B,H,Pd), new_state)."""
+    h = x.shape[1]
+    rep = h // b.shape[1]
+    bh = jnp.repeat(b, rep, axis=1)                           # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1)
+    da = jnp.exp((dt * a[None, :]).astype(jnp.float32))       # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(jnp.float32),
+                     x.astype(jnp.float32), bh.astype(jnp.float32))
+    new_state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv, width W. xbc (B,T,C); conv_w (W,C).
+    With conv_state (B,W-1,C) prepends history (decode/streaming)."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)                # (B,T+W-1,C)
+    out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i][None, None]
+              for i in range(w))
+    new_state = full[:, -(w - 1):] if w > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba_mixer(u, p, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                single_step=False):
+    """u (B,T,D) → (y (B,T,D), (conv_state, ssm_state)).
+
+    single_step=True runs the O(1) decode recurrence (T must be 1)."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    bsz, t, _ = u.shape
+    z = u @ p["w_z"]
+    xin = u @ p["w_x"]
+    b = u @ p["w_B"]
+    c = u @ p["w_C"]
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"][None, None])          # (B,T,H)
+
+    xbc = jnp.concatenate([xin, b, c], axis=-1)               # (B,T,conv)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(u.dtype), conv_state)
+    xin, b, c = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], -1)
+
+    xh = xin.reshape(bsz, t, nh, s.head_dim)
+    bg = b.reshape(bsz, t, s.n_groups, s.d_state)
+    cg = c.reshape(bsz, t, s.n_groups, s.d_state)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+
+    if single_step:
+        y1, new_ssm = ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0])
+        y = y1[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, a, bg, cg, chunk=s.chunk,
+                                 init_state=ssm_state)
+    y = y + xh * p["D"].astype(u.dtype)[None, None, :, None]
+    y = y.reshape(bsz, t, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["w_out"], (new_conv, new_ssm)

@@ -1,0 +1,96 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with the compressed-latent KV
+cache and the absorbed-projection decode path (scores computed in latent
+space so the per-step cost is O(S·lora), not O(S·H·hd))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import apply_rope, attention
+from .params import Spec
+
+
+def mla_schema(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    h = cfg.n_heads
+    return {
+        "wq":     Spec((cfg.d_model, h * (m.qk_nope_dim + m.qk_rope_dim)),
+                       P("data", "model")),
+        "w_dkv":  Spec((cfg.d_model, m.kv_lora_rank), P("data", None)),
+        "w_krope": Spec((cfg.d_model, m.qk_rope_dim), P("data", None)),
+        "w_uk":   Spec((m.kv_lora_rank, h, m.qk_nope_dim),
+                       P(None, "model", None)),
+        "w_uv":   Spec((m.kv_lora_rank, h, m.v_head_dim),
+                       P(None, "model", None)),
+        "wo":     Spec((h * m.v_head_dim, cfg.d_model), P("model", "data")),
+    }
+
+
+def _project_q(x, p, cfg, positions):
+    m = cfg.mla
+    b, t, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, t, cfg.n_heads, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(x, p, cfg, positions):
+    m = cfg.mla
+    ckv = x @ p["w_dkv"]                                     # (B, T, lora)
+    kr = (x @ p["w_krope"])[:, :, None, :]                   # (B, T, 1, rope)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0]  # (B, T, rope)
+    return ckv, kr
+
+
+def mla_attention(x, p, cfg: ModelConfig, positions, *, causal=True):
+    """Full (prefill/train) path: decompress per-token K/V, run attention."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    q_nope, q_rope = _project_q(x, p, cfg, positions)
+    ckv, kr = _latent_kv(x, p, cfg, positions)
+    k_nope = jnp.einsum("btl,lhn->bthn", ckv, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("btl,lhv->bthv", ckv, p["w_uv"].astype(x.dtype))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None], (b, t, cfg.n_heads,
+                                                   m.qk_rope_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    o = attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return o.reshape(b, t, -1) @ p["wo"]
+
+
+def mla_decode(x, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
+    """Absorbed decode: one new token against the latent cache.
+
+    x (B, 1, D); ckv_cache (B, S, lora); krope_cache (B, S, rope); pos (B,)
+    Returns (out (B, 1, D), new_ckv (B, 1, lora), new_krope (B, 1, rope)).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    positions = pos[:, None]                                 # (B, 1)
+    q_nope, q_rope = _project_q(x, p, cfg, positions)        # (B,1,H,·)
+    ckv_new, kr_new = _latent_kv(x, p, cfg, positions)
+
+    s = ckv_cache.shape[1]
+
+    def upd(c, u, pp):
+        return jax.lax.dynamic_update_slice(c, u.astype(c.dtype), (pp, 0))
+
+    ckv = jax.vmap(upd)(ckv_cache, ckv_new, pos)
+    kr = jax.vmap(upd)(krope_cache, kr_new, pos)
+
+    # absorb W_uk into q: score in latent space
+    q_lat = jnp.einsum("bohn,lhn->bohl", q_nope, p["w_uk"].astype(x.dtype))
+    scores = (jnp.einsum("bohl,bsl->bhs", q_lat, ckv) +
+              jnp.einsum("bohr,bsr->bhs", q_rope, kr)
+              ).astype(jnp.float32)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    valid = jnp.arange(s)[None, :] <= pos[:, None]           # (B, S)
+    scores = jnp.where(valid[:, None], scores * scale, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsl->bhl", w, ckv)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, p["w_uv"].astype(x.dtype))
+    out = o.reshape(b, 1, -1) @ p["wo"]
+    return out, ckv, kr

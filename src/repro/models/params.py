@@ -1,0 +1,98 @@
+"""Declarative parameter schemas.
+
+A schema is a pytree whose leaves are ``Spec(shape, pspec, init, dtype)``.
+The same schema serves three consumers:
+  * ``init_params``     — materialise real arrays (smoke tests, examples)
+  * ``abstract_params`` — ShapeDtypeStruct stand-ins (dry-run, no allocation)
+  * ``shardings``       — NamedSharding tree for pjit in_shardings
+Stacked layers: ``stack(schema, n)`` prepends a layer axis (never sharded)
+to every leaf — the layout ``lax.scan`` consumes and FSDP overlaps on.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Spec(NamedTuple):
+    shape: tuple
+    pspec: P
+    init: str = "normal"     # "normal" | "zeros" | "ones" | "embed"
+    dtype: Any = jnp.float32
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def tree_map_specs(fn: Callable[[Spec], Any], schema):
+    return jax.tree.map(fn, schema, is_leaf=is_spec)
+
+
+def stack(schema, n: int):
+    """Prepend a stacked-layer axis of size n to every leaf."""
+    return tree_map_specs(
+        lambda s: Spec((n,) + s.shape, P(None, *s.pspec), s.init, s.dtype),
+        schema)
+
+
+def init_params(schema, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(s: Spec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "neg":
+            return jnp.full(s.shape, -1, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = 0.02 if s.init == "embed" else fan_in ** -0.5
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale
+                ).astype(s.dtype)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(schema, mesh: Optional[Mesh] = None):
+    """ShapeDtypeStruct tree; with a mesh, structs carry shardings so
+    jit.lower() sees the intended layout without allocating anything."""
+    def one(s: Spec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, s.pspec))
+    return tree_map_specs(one, schema)
+
+
+def shardings(schema, mesh: Mesh):
+    return tree_map_specs(lambda s: NamedSharding(mesh, s.pspec), schema)
+
+
+def pspecs(schema):
+    return tree_map_specs(lambda s: s.pspec, schema)
+
+
+def cast_floats(tree, dtype):
+    """Cast float leaves to the compute dtype (applied per scanned block so
+    the cast happens after the FSDP gather, layer by layer)."""
+    def one(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(one, tree)
+
+
+def n_params(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,515 @@
+"""Unified decoder-only transformer covering dense/GQA, SWA, MLA, MoE, SSM,
+hybrid and interleaved-cross-attention (VLM) families — one scanned block
+stack parameterised entirely by ModelConfig.
+
+Layout invariants:
+  * block weights are stacked on a leading layer axis and consumed by
+    ``lax.scan`` (compile-time O(1) in depth; FSDP gathers overlap the scan)
+  * activations are (B, T, D) with B sharded over the batch mesh axes
+  * decode caches are per-layer pytrees stacked the same way
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers, mamba2, mla as mla_lib, moe as moe_lib
+from .config import ModelConfig
+from .params import Spec, cast_floats, stack
+from repro.dist.sharding import (col_parallel_qkv, constrain_act,
+                                 constrain_batch, fused_mlp, row_parallel,
+                                 seq_all_gather, sp_gather, sp_scatter)
+
+# --------------------------------------------------------------------------
+# schemas
+# --------------------------------------------------------------------------
+
+
+def attn_schema(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": Spec((d, h * hd), P("data", "model")),
+        "wk": Spec((d, kv * hd), P("data", "model")),
+        "wv": Spec((d, kv * hd), P("data", "model")),
+        "wo": Spec((h * hd, d), P("model", "data")),
+    }
+
+
+def mlp_schema(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": Spec((d, f), P("data", "model")),
+        "w_in":   Spec((d, f), P("data", "model")),
+        "w_out":  Spec((f, d), P("model", "data")),
+    }
+
+
+def _mixer_schema(cfg: ModelConfig) -> dict:
+    sch: dict = {"ln1": Spec((cfg.d_model,), P(None), "ones")}
+    if cfg.mixer_kind in ("attn", "hybrid"):
+        sch["attn"] = (mla_lib.mla_schema(cfg) if cfg.attn_kind == "mla"
+                       else attn_schema(cfg))
+    if cfg.mixer_kind in ("ssm", "hybrid"):
+        sch["ssm"] = mamba2.mamba_schema(cfg)
+    if cfg.mixer_kind == "hybrid":
+        sch["attn_bn"] = Spec((cfg.d_model,), P(None), "ones")
+        sch["ssm_bn"] = Spec((cfg.d_model,), P(None), "ones")
+    return sch
+
+
+def block_schema(cfg: ModelConfig) -> dict:
+    sch = _mixer_schema(cfg)
+    if cfg.mixer_kind != "ssm":                     # mamba2 blocks: mixer only
+        sch["ln2"] = Spec((cfg.d_model,), P(None), "ones")
+        sch["mlp"] = (moe_lib.moe_schema(cfg.d_model, cfg.moe) if cfg.moe
+                      else mlp_schema(cfg))
+    return sch
+
+
+def cross_block_schema(cfg: ModelConfig) -> dict:
+    sch = {"ln1": Spec((cfg.d_model,), P(None), "ones"),
+           "lnc": Spec((cfg.d_model,), P(None), "ones"),
+           "attn": attn_schema(cfg),
+           "ln2": Spec((cfg.d_model,), P(None), "ones"),
+           "mlp": (moe_lib.moe_schema(cfg.d_model, cfg.moe) if cfg.moe
+                   else mlp_schema(cfg))}
+    return sch
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    sch: dict = {"embed": Spec((v, d), P("model", "data"), "embed")}
+    if cfg.cross_attn_period:
+        per = cfg.cross_attn_period
+        n_groups = cfg.n_layers // per
+        sch["blocks"] = stack(stack(block_schema(cfg), per - 1), n_groups)
+        sch["cross_blocks"] = stack(cross_block_schema(cfg), n_groups)
+    else:
+        sch["blocks"] = stack(block_schema(cfg), cfg.n_layers)
+    sch["final_norm"] = Spec((d,), P(None), "ones")
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = Spec((d, v), P("data", "model"))
+    return sch
+
+
+# --------------------------------------------------------------------------
+# block application (full-sequence: train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _self_attn(x, p, cfg, positions):
+    """x may be seq-sharded (SP): col_parallel_qkv gathers internally."""
+    from repro.dist.sharding import constrain_heads
+    b, t, _ = x.shape
+    q2, k2, v2 = col_parallel_qkv(x, p["wq"], p["wk"], p["wv"])
+    q = q2.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k2.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = v2.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    q = constrain_heads(layers.apply_rope(q, positions, cfg.rope_theta))
+    k = constrain_heads(layers.apply_rope(k, positions, cfg.rope_theta))
+    v = constrain_heads(v)
+    o = layers.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                         chunk=cfg.attn_chunk)
+    # explicit row-parallel dot + psum_scatter (reduce-scatter semantics)
+    b, t, h, hd = o.shape
+    return row_parallel(o.reshape(b, t, h * hd), p["wo"])
+
+
+def _mlp(x, p, cfg):
+    if cfg.moe:
+        return moe_lib.moe_ffn(x, p, cfg.moe)
+    return fused_mlp(x, p["w_gate"], p["w_in"], p["w_out"])
+
+
+def block_apply(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions,
+                ) -> jnp.ndarray:
+    p = cast_floats(p, cfg.dtype)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    # SP (dense attn): h stays SEQ-SHARDED; the qkv shard_map gathers it
+    # internally exactly once, so both fwd (AG) and bwd (psum_scatter of the
+    # input cotangent) move 1× traffic — the Korthikanti schedule. Partial
+    # history: constraints alone left 2.6 TB/step of bwd all-reduce
+    # (EXPERIMENTS.md §Perf iterations 1-4).
+    if cfg.mixer_kind == "attn" and cfg.attn_kind != "mla":
+        x = x + _self_attn(h, p["attn"], cfg, positions)
+    elif cfg.mixer_kind == "attn":
+        x = x + mla_lib.mla_attention(seq_all_gather(h), p["attn"], cfg,
+                                      positions)
+    elif cfg.mixer_kind == "ssm":
+        y, _ = mamba2.mamba_mixer(seq_all_gather(h), p["ssm"], cfg)
+        return x + y                                 # mamba2: no MLP
+    else:                                            # hybrid (hymba)
+        hg = seq_all_gather(h)
+        ya = _self_attn(hg, p["attn"], cfg, positions)
+        ys, _ = mamba2.mamba_mixer(hg, p["ssm"], cfg)
+        x = x + 0.5 * (layers.rms_norm(ya, p["attn_bn"], cfg.norm_eps)
+                       + layers.rms_norm(ys, p["ssm_bn"], cfg.norm_eps))
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp(h2, p["mlp"], cfg)
+
+
+def cross_block_apply(cfg, p, x, context):
+    """Cross-attention block (VLM): queries from x, K/V from context
+    embeddings (no rope on cross-attn, matching Llama-3.2-Vision)."""
+    p = cast_floats(p, cfg.dtype)
+    b, t, _ = x.shape
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    ctx = layers.rms_norm(context, p["lnc"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = (ctx @ p["attn"]["wk"]).reshape(b, ctx.shape[1], cfg.n_kv_heads,
+                                        cfg.head_dim)
+    v = (ctx @ p["attn"]["wv"]).reshape(b, ctx.shape[1], cfg.n_kv_heads,
+                                        cfg.head_dim)
+    o = layers.attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    x = x + layers.attn_out(o, p["attn"])
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp(h2, p["mlp"], cfg)
+
+
+# --------------------------------------------------------------------------
+# forward pass
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain_act(x.astype(cfg.dtype))
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray, *,
+            context: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens (B, T) int32 → final hidden states (B, T, D)."""
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, p_block):
+        y = block_apply(cfg, p_block, carry, positions)
+        # plain constraint (not the custom_vjp pair): block outputs are
+        # already seq-sharded by row_parallel/fused_mlp under SP; the
+        # custom-vjp scatter here added a redundant bwd all-gather (§Perf).
+        return constrain_act(y), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.cross_attn_period:
+        ctx = context.astype(cfg.dtype)
+
+        def group(carry, xs):
+            p_selfs, p_cross = xs
+
+            def inner(c, pb):
+                return body(c, pb)
+
+            carry, _ = jax.lax.scan(inner, carry, p_selfs)
+            carry = cross_block_apply(cfg, p_cross, carry, ctx)
+            return constrain_act(carry), None
+
+        if cfg.remat:
+            group = jax.checkpoint(group, prevent_cse=False)
+        x, _ = jax.lax.scan(group, x,
+                            (params["blocks"], params["cross_blocks"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    return layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def lm_logits(cfg: ModelConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x.astype(cfg.dtype) @ head.astype(cfg.dtype)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# decode (single new token against a cache)
+# --------------------------------------------------------------------------
+
+
+def init_cache_schema(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Schema (Spec tree) for the decode cache — same machinery as params so
+    the dry-run can make abstract sharded caches. Sequence dim of full-attn
+    caches is sharded over "model" (context parallelism: KV heads of the
+    assigned archs don't divide the 16-way model axis — DESIGN.md §5)."""
+    def layer_cache() -> dict:
+        if cfg.attn_kind == "mla":
+            m = cfg.mla
+            return {
+                "ckv": Spec((batch, max_seq, m.kv_lora_rank),
+                            P(("pod", "data"), "model", None), "zeros",
+                            cfg.dtype),
+                "kr": Spec((batch, max_seq, m.qk_rope_dim),
+                           P(("pod", "data"), "model", None), "zeros",
+                           cfg.dtype),
+            }
+        c: dict = {}
+        if cfg.mixer_kind in ("attn", "hybrid"):
+            w = cfg.sliding_window
+            s = min(w, max_seq) if w else max_seq
+            seq_ax = "model" if not w else None
+            kvshape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+            c["k"] = Spec(kvshape, P(("pod", "data"), seq_ax, None, None),
+                          "zeros", cfg.dtype)
+            c["v"] = Spec(kvshape, P(("pod", "data"), seq_ax, None, None),
+                          "zeros", cfg.dtype)
+            if w:
+                c["kpos"] = Spec((batch, s), P(("pod", "data"), None),
+                                 "neg", jnp.int32)
+        if cfg.mixer_kind in ("ssm", "hybrid"):
+            s_cfg = cfg.ssm
+            d_in, nh, conv_dim = mamba2.ssm_dims(cfg)
+            c["conv"] = Spec((batch, s_cfg.conv_width - 1, conv_dim),
+                             P(("pod", "data"), None, "model"), "zeros",
+                             cfg.dtype)
+            c["ssm"] = Spec((batch, nh, s_cfg.head_dim, s_cfg.d_state),
+                            P(("pod", "data"), "model", None, None), "zeros",
+                            jnp.float32)
+        return c
+
+    if cfg.cross_attn_period:
+        per = cfg.cross_attn_period
+        n_groups = cfg.n_layers // per
+        ctx_kv = (batch, cfg.n_context_tokens, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "blocks": stack(stack(layer_cache(), per - 1), n_groups),
+            "cross_k": Spec((n_groups,) + ctx_kv,
+                            P(None, ("pod", "data"), None, None, None),
+                            "zeros", cfg.dtype),
+            "cross_v": Spec((n_groups,) + ctx_kv,
+                            P(None, ("pod", "data"), None, None, None),
+                            "zeros", cfg.dtype),
+        }
+    return {"blocks": stack(layer_cache(), cfg.n_layers)}
+
+
+def _batched_update(cache_arr, new_vals, pos):
+    """Write new_vals (B, 1, ...) into cache (B, S, ...) at per-batch pos."""
+    def one(c, u, p):
+        return jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (p,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache_arr, new_vals, pos)
+
+
+def _decode_self_attn(x, p, cfg, cache, pos):
+    """One-token self-attention against the cache, per-slot positions.
+    pos: (B,) int32. Returns (out, new_cache)."""
+    b = x.shape[0]
+    positions = pos[:, None]                               # (B, 1)
+    q, k_new, v_new = layers.gqa_qkv(x, p, cfg, positions)
+
+    if cfg.sliding_window:
+        w = cache["k"].shape[1]
+        slot = jnp.mod(pos, w)
+        k = _batched_update(cache["k"], k_new, slot)
+        v = _batched_update(cache["v"], v_new, slot)
+        kpos = cache["kpos"].at[jnp.arange(b), slot].set(pos)
+        o = layers.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                             q_offset=pos, k_positions=kpos,
+                             chunk=cfg.attn_chunk)
+        new_cache = dict(cache, k=k, v=v, kpos=kpos)
+    else:
+        k = _batched_update(cache["k"], k_new, pos)
+        v = _batched_update(cache["v"], v_new, pos)
+        o = layers.attention(q, k, v, causal=True, q_offset=pos,
+                             kv_len=pos + 1, chunk=cfg.attn_chunk)
+        new_cache = dict(cache, k=k, v=v)
+    return layers.attn_out(o, p), new_cache
+
+
+def block_decode(cfg: ModelConfig, p: dict, x, cache: dict, pos):
+    p = cast_floats(p, cfg.dtype)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mixer_kind == "attn":
+        if cfg.attn_kind == "mla":
+            out, ckv, kr = mla_lib.mla_decode(h, p["attn"], cfg,
+                                              cache["ckv"], cache["kr"], pos)
+            x = x + out
+            new_cache = dict(cache, ckv=ckv, kr=kr)
+        else:
+            out, new_cache = _decode_self_attn(h, p["attn"], cfg, cache, pos)
+            x = x + out
+    elif cfg.mixer_kind == "ssm":
+        y, (conv, ssm) = mamba2.mamba_mixer(
+            h, p["ssm"], cfg, conv_state=cache["conv"],
+            ssm_state=cache["ssm"], single_step=True)
+        return x + y, dict(cache, conv=conv, ssm=ssm)
+    else:                                            # hybrid
+        ya, new_cache = _decode_self_attn(h, p["attn"], cfg, cache, pos)
+        ys, (conv, ssm) = mamba2.mamba_mixer(
+            h, p["ssm"], cfg, conv_state=cache["conv"],
+            ssm_state=cache["ssm"], single_step=True)
+        x = x + 0.5 * (layers.rms_norm(ya, p["attn_bn"], cfg.norm_eps)
+                       + layers.rms_norm(ys, p["ssm_bn"], cfg.norm_eps))
+        new_cache = dict(new_cache, conv=conv, ssm=ssm)
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp(h2, p["mlp"], cfg), new_cache
+
+
+def _cross_decode(cfg, p, x, ck, cv):
+    p = cast_floats(p, cfg.dtype)
+    b = x.shape[0]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    o = layers.attention(q, ck, cv, causal=False, chunk=cfg.attn_chunk)
+    x = x + layers.attn_out(o, p["attn"])
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp(h2, p["mlp"], cfg)
+
+
+def decode(cfg: ModelConfig, params: dict, cache: dict, token: jnp.ndarray,
+           pos) -> tuple[jnp.ndarray, dict]:
+    """token (B, 1) int32, pos scalar or (B,) per-slot positions
+    (continuous batching) → (logits (B, V) f32, new cache)."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (token.shape[0],))
+    x = embed_tokens(cfg, params, token)
+
+    if cfg.cross_attn_period:
+        def group(carry, xs):
+            p_selfs, p_cross, c_selfs, ck, cv = xs
+
+            def inner(c2, xs2):
+                pb, cb = xs2
+                y, cb_new = block_decode(cfg, pb, c2, cb, pos)
+                return y, cb_new
+
+            carry, new_c = jax.lax.scan(inner, carry, (p_selfs, c_selfs))
+            carry = _cross_decode(cfg, p_cross, carry, ck, cv)
+            return carry, new_c
+
+        x, new_blocks = jax.lax.scan(
+            group, x, (params["blocks"], params["cross_blocks"],
+                       cache["blocks"], cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, blocks=new_blocks)
+    else:
+        def body(carry, xs):
+            pb, cb = xs
+            y, cb_new = block_decode(cfg, pb, carry, cb, pos)
+            return y, cb_new
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params, x)[:, 0], new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray, cache: dict,
+            *, context: Optional[jnp.ndarray] = None):
+    """Run the full prompt, fill the cache, return last-position logits.
+
+    Implemented as forward() plus cache-filling projections per layer —
+    lowered for the ``prefill_*`` dry-run shapes. For cross-attn models the
+    context K/V are projected once here.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    t = tokens.shape[1]
+
+    def _write_kv(cache_block, new_cb, k, v):
+        if cfg.sliding_window:
+            w = cache_block["k"].shape[1]
+            keep = min(w, t)
+            new_cb["k"] = jax.lax.dynamic_update_slice(
+                cache_block["k"], k[:, t - keep:].astype(
+                    cache_block["k"].dtype), (0, 0, 0, 0))
+            new_cb["v"] = jax.lax.dynamic_update_slice(
+                cache_block["v"], v[:, t - keep:].astype(
+                    cache_block["v"].dtype), (0, 0, 0, 0))
+            new_cb["kpos"] = jax.lax.dynamic_update_slice(
+                cache_block["kpos"],
+                jnp.broadcast_to(jnp.arange(t - keep, t, dtype=jnp.int32),
+                                 (k.shape[0], keep)), (0, 0))
+        else:
+            new_cb["k"] = jax.lax.dynamic_update_slice(
+                cache_block["k"], k.astype(cache_block["k"].dtype),
+                (0, 0, 0, 0))
+            new_cb["v"] = jax.lax.dynamic_update_slice(
+                cache_block["v"], v.astype(cache_block["v"].dtype),
+                (0, 0, 0, 0))
+
+    def fill_block(carry, p_block, cache_block):
+        """Apply one block over the full prompt AND fill its cache — every
+        mixer runs exactly once."""
+        x_in = carry
+        p_block = cast_floats(p_block, cfg.dtype)
+        h = layers.rms_norm(x_in, p_block["ln1"], cfg.norm_eps)
+        new_cb = dict(cache_block)
+
+        if cfg.mixer_kind == "attn" and cfg.attn_kind == "mla":
+            ckv, kr = mla_lib._latent_kv(h, p_block["attn"], cfg, positions)
+            new_cb["ckv"] = jax.lax.dynamic_update_slice(
+                cache_block["ckv"], ckv.astype(cache_block["ckv"].dtype),
+                (0, 0, 0))
+            new_cb["kr"] = jax.lax.dynamic_update_slice(
+                cache_block["kr"], kr.astype(cache_block["kr"].dtype),
+                (0, 0, 0))
+            x = x_in + mla_lib.mla_attention(h, p_block["attn"], cfg,
+                                             positions)
+        elif cfg.mixer_kind == "attn":
+            q, k, v = layers.gqa_qkv(h, p_block["attn"], cfg, positions)
+            _write_kv(cache_block, new_cb, k, v)
+            o = layers.attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 chunk=cfg.attn_chunk)
+            x = x_in + layers.attn_out(o, p_block["attn"])
+        elif cfg.mixer_kind == "ssm":
+            y, (conv, ssm) = mamba2.mamba_mixer(h, p_block["ssm"], cfg)
+            new_cb["conv"] = conv.astype(cache_block["conv"].dtype)
+            new_cb["ssm"] = ssm
+            return x_in + y, new_cb                      # mamba2: no MLP
+        else:                                            # hybrid
+            q, k, v = layers.gqa_qkv(h, p_block["attn"], cfg, positions)
+            _write_kv(cache_block, new_cb, k, v)
+            o = layers.attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 chunk=cfg.attn_chunk)
+            ya = layers.attn_out(o, p_block["attn"])
+            ys, (conv, ssm) = mamba2.mamba_mixer(h, p_block["ssm"], cfg)
+            new_cb["conv"] = conv.astype(cache_block["conv"].dtype)
+            new_cb["ssm"] = ssm
+            x = x_in + 0.5 * (
+                layers.rms_norm(ya, p_block["attn_bn"], cfg.norm_eps)
+                + layers.rms_norm(ys, p_block["ssm_bn"], cfg.norm_eps))
+
+        h2 = layers.rms_norm(x, p_block["ln2"], cfg.norm_eps)
+        return x + _mlp(h2, p_block["mlp"], cfg), new_cb
+
+    if cfg.cross_attn_period:
+        ctx = context.astype(cfg.dtype)
+
+        def group(carry, xs):
+            p_selfs, p_cross, c_selfs = xs
+
+            def inner(c2, xs2):
+                pb, cb = xs2
+                y, cb_new = fill_block(c2, pb, cb)
+                return y, cb_new
+
+            carry, new_c = jax.lax.scan(inner, carry, (p_selfs, c_selfs))
+            b = ctx.shape[0]
+            ck = (ctx @ p_cross["attn"]["wk"]).reshape(
+                b, ctx.shape[1], cfg.n_kv_heads, cfg.head_dim)
+            cv = (ctx @ p_cross["attn"]["wv"]).reshape(
+                b, ctx.shape[1], cfg.n_kv_heads, cfg.head_dim)
+            carry = cross_block_apply(cfg, p_cross, carry, ctx)
+            return carry, (new_c, ck.astype(cfg.dtype), cv.astype(cfg.dtype))
+
+        x, (new_blocks, cks, cvs) = jax.lax.scan(
+            group, x, (params["blocks"], params["cross_blocks"],
+                       cache["blocks"]))
+        new_cache = dict(cache, blocks=new_blocks, cross_k=cks, cross_v=cvs)
+    else:
+        def body(carry, xs):
+            pb, cb = xs
+            return fill_block(carry, pb, cb)
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params, x[:, -1:])[:, 0], new_cache

@@ -1,0 +1,99 @@
+"""Batched decode serving: fixed-slot continuous batching engine.
+
+A ServeEngine owns B cache slots with independent per-slot positions.
+Every tick runs ONE jitted decode over all slots (prompt tokens are fed
+through the same decode path — "prefill-as-decode" continuous batching);
+finished requests free their slot for the next queued request. This is the
+standard TPU decode-serving shape: static batch, per-slot position vector,
+preallocated cache — no paging required when slots own their cache region.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+from repro.models.params import init_params
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    fed: int = 0                    # prompt tokens already consumed
+
+
+class ServeEngine:
+    def __init__(self, model: ModelAPI, params, *, n_slots: int = 4,
+                 max_seq: int = 256, key: Optional[jax.Array] = None):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = init_params(model.cache_schema(n_slots, max_seq),
+                                 key or jax.random.PRNGKey(0))
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.slot_req: list = [None] * n_slots
+        self.queue: list = []
+        self._decode = jax.jit(model.decode, donate_argnums=1)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                req.slot, req.fed = slot, 0
+                self.pos[slot] = 0
+                self.slot_req[slot] = req
+
+    def step(self) -> int:
+        """One engine tick: one token for every active slot, in one call."""
+        self._admit()
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            active.append(slot)
+            if req.fed < len(req.prompt):                  # still prefilling
+                tokens[slot, 0] = req.prompt[req.fed]
+            else:                                          # generating
+                tokens[slot, 0] = req.out[-1]
+        if not active:
+            return 0
+
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos))
+        logits = np.asarray(logits)
+
+        for slot in active:
+            req = self.slot_req[slot]
+            self.pos[slot] += 1
+            if req.fed < len(req.prompt):
+                req.fed += 1
+                if req.fed < len(req.prompt):
+                    continue                               # keep prefilling
+            req.out.append(int(np.argmax(logits[slot])))
+            if len(req.out) >= req.max_new or self.pos[slot] >= self.max_seq - 1:
+                req.done = True
+                self.slot_req[slot] = None
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

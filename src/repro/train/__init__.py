@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state  # noqa: F401
+from .steps import TrainConfig, TrainState, make_train_step, init_train_state  # noqa: F401

@@ -1,0 +1,93 @@
+"""Training step factory: loss → grads (optionally micro-batched) → AdamW.
+
+Distributed-optimization hooks:
+  * gradient compression — ``grad_dtype="bfloat16"`` makes the backward pass
+    (and therefore the cross-pod grad all-reduce XLA inserts) run in bf16,
+    halving DCI traffic; the optimizer math stays f32 (error feedback is the
+    Adam m/v accumulation itself).
+  * grad accumulation — microbatch scan; the all-reduce of microbatch i
+    overlaps the backward of i+1 under XLA's latency-hiding scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    accum_steps: int = 1
+    grad_dtype: str = "float32"       # "bfloat16" → compressed grad reduce
+
+
+def make_train_step(model: ModelAPI, tcfg: TrainConfig,
+                    grad_pspecs=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_pspecs: optional PartitionSpec tree matching params — constrains
+    gradients to the param layout so the cross-data reduction lowers as
+    reduce-scatter (each chip only receives ITS shard) instead of the
+    partitioner's default all-reduce: half the traffic (§Perf iteration 3).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if tcfg.grad_dtype == "bfloat16":
+            # cast-through: grads flow (and reduce) in bf16
+            p16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16)
+                               if x.dtype == jnp.float32 else x, params)
+            loss, g16 = jax.value_and_grad(loss_fn)(p16, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), g16)
+            return loss, grads
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch):
+        if tcfg.accum_steps > 1:
+            a = tcfg.accum_steps
+            micro = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = grads_of(state.params, mb)
+                g_sum = jax.tree.map(jnp.add, g_sum, g)
+                return (loss_sum + loss, g_sum), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0), zero_g),
+                                            micro)
+            loss = loss / a
+            grads = jax.tree.map(lambda g: g / a, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+        if grad_pspecs is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_pspecs)
+
+        new_params, new_opt, metrics = adamw_update(
+            tcfg.optimizer, state.params, grads, state.opt)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(model: ModelAPI, key: jax.Array) -> TrainState:
+    from repro.models.params import init_params
+    params = init_params(model.schema, key)
+    return TrainState(params=params, opt=init_opt_state(params))

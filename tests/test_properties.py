@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the system's invariants (core + substrate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import density as density_lib
+from repro.core import lut as lut_lib
+from repro.core.metrics import recall_1_at_k, recall_n_at_k
+from repro.core.pq import PQCodebook, decode, encode, train_codebook
+from repro.core.ref import exact_topk
+from repro.models.mamba2 import ssd_chunked
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 60), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_exact_topk_is_exact(n, k, seed):
+    """Streaming top-k == argsort of the full distance matrix."""
+    key = jax.random.PRNGKey(seed)
+    pts = jax.random.normal(key, (n, 6))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (3, 6))
+    _, ids = exact_topk(q, pts, k=k, chunk=16)
+    d = jnp.sum((q[:, None] - pts[None]) ** 2, -1)
+    want = jnp.argsort(d, axis=1)[:, :k]
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
+def test_pq_encode_decode_nearest(e, seed):
+    """Each code must be the NEAREST entry: re-encoding a decoded vector is
+    a fixed point (PQ idempotence)."""
+    key = jax.random.PRNGKey(seed)
+    res = jax.random.normal(key, (200, 8))
+    cb = train_codebook(res, n_entries=e, m=2, n_iters=4, key=key)
+    codes = encode(res, cb)
+    recon = decode(codes, cb)
+    codes2 = encode(recon, cb)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.1, 3.0), st.floats(1.05, 4.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_mask_monotone_in_threshold(tau0, mult, seed):
+    """Selection masks are monotone: a larger threshold keeps a superset."""
+    key = jax.random.PRNGKey(seed)
+    qsub = jax.random.normal(key, (3, 4, 2))
+    cb_res = jax.random.normal(jax.random.fold_in(key, 1), (20, 8))
+    cb = train_codebook(cb_res, n_entries=8, m=2, n_iters=3)
+    t1 = jnp.full((3, 4), tau0)
+    _, m1 = lut_lib.build_lut(qsub, cb, t1)
+    _, m2 = lut_lib.build_lut(qsub, cb, t1 * mult)
+    assert bool(jnp.all(m2 | ~m1)), "larger tau must keep a superset"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(5, 40), st.integers(0, 2 ** 31 - 1))
+def test_recall_metric_bounds_and_identity(k, seed):
+    key = jax.random.PRNGKey(seed)
+    gt = jax.random.permutation(key, jnp.arange(100))[None, :k]
+    # retrieving exactly the ground truth → recall 1
+    assert float(recall_n_at_k(gt, gt)) == 1.0
+    assert float(recall_1_at_k(gt, gt[:, 0])) == 1.0
+    # disjoint retrieval → recall 0
+    other = gt + 1000
+    assert float(recall_n_at_k(other, gt)) == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(8, 48), st.integers(0, 2 ** 31 - 1))
+def test_ssd_chunk_invariance(b, t, seed):
+    """SSD output must not depend on the chunk size (pure tiling)."""
+    key = jax.random.PRNGKey(seed)
+    h, p, g, n = 2, 4, 1, 3
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, t, g, n))
+    cc = jax.random.normal(ks[4], (b, t, g, n))
+    y8, s8 = ssd_chunked(x, dt, a, bb, cc, chunk=8)
+    y16, s16 = ssd_chunked(x, dt, a, bb, cc, chunk=16)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s8), np.asarray(s16),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_density_grid_total_mass(seed):
+    """Grid cell counts sum to N (no point lost/duplicated by binning)."""
+    key = jax.random.PRNGKey(seed)
+    pts = jax.random.normal(key, (4, 300, 2))
+    grid, lo, hi = density_lib.build_density_grid(pts, grid_size=16)
+    span = np.maximum(np.asarray(hi - lo), 1e-6)
+    cell_area = (span[:, 0] / 16) * (span[:, 1] / 16)
+    counts = (np.expm1(np.asarray(grid))
+              * cell_area[:, None, None]).sum(axis=(1, 2))
+    np.testing.assert_allclose(counts, 300.0, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_hit_table_antisymmetry_bounds(s_dim, seed):
+    """Reward/penalty tables: +1 ⊆ outer hits; -1 = complement of outer."""
+    key = jax.random.PRNGKey(seed)
+    qsub = jax.random.normal(key, (2, s_dim, 2))
+    cb_res = jax.random.normal(jax.random.fold_in(key, 1), (40, 2 * s_dim))
+    cb = train_codebook(cb_res, n_entries=8, m=2, n_iters=3)
+    tau = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                    (2, s_dim))) + 0.2
+    lutv, mask = lut_lib.build_lut(qsub, cb, tau)
+    table = lut_lib.hit_tables(lutv, mask, tau, mode="reward_penalty")
+    t = np.asarray(table)
+    m = np.asarray(mask)
+    assert np.all((t == -1) == ~m)
+    assert np.all((t == 1) <= m)
