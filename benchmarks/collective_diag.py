@@ -9,8 +9,6 @@ os.environ.setdefault("XLA_FLAGS",
 import argparse
 import re
 
-import jax
-
 from repro.launch import hlo_analysis as ha
 
 

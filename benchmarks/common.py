@@ -5,21 +5,31 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import JunoConfig, build, exact_topk
 from repro.data import DEEP_LIKE, SIFT_LIKE, TTI_LIKE, make_dataset
 
-# CPU-scaled defaults (flags in run.py scale up)
+# CPU-scaled defaults (flags in run.py scale up, --smoke scales down).
+# Module globals resolved at CALL time so run.py can adjust them after import.
 N_POINTS = 30_000
 N_QUERIES = 64
 N_CLUSTERS = 128
 N_ENTRIES = 128
 
 
+def set_smoke_sizes():
+    """Shrink the shared benchmark problem to CI-smoke scale (~seconds per
+    figure module). Call before the first get_bench_index()."""
+    global N_POINTS, N_QUERIES, N_CLUSTERS, N_ENTRIES
+    N_POINTS, N_QUERIES, N_CLUSTERS, N_ENTRIES = 4_000, 16, 32, 32
+    get_bench_index.cache_clear()
+
+
 @functools.lru_cache(maxsize=4)
-def get_bench_index(dataset: str = "deep", n_points: int = N_POINTS,
-                    n_queries: int = N_QUERIES):
+def get_bench_index(dataset: str = "deep", n_points: int | None = None,
+                    n_queries: int | None = None):
+    n_points = N_POINTS if n_points is None else n_points
+    n_queries = N_QUERIES if n_queries is None else n_queries
     spec = {"deep": DEEP_LIKE, "sift": SIFT_LIKE, "tti": TTI_LIKE}[dataset]
     pts, queries = make_dataset(spec, n_points, n_queries,
                                 key=jax.random.PRNGKey(11))

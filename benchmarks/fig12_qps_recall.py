@@ -6,9 +6,6 @@ claim is carried by the derived work columns: f32 gather-accumulate ops per
 query (what the paper's selection skips) and int8-vs-f32 scan mix."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import recall_1_at_k, recall_n_at_k, search
 from .common import emit, get_bench_index, time_fn
 

@@ -7,11 +7,9 @@
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import recall_1_at_k, search
 from repro.core import density as density_lib
@@ -68,7 +66,6 @@ def run():
 
 def _static_search(index, queries, nprobe, tau):
     """JUNO-H with a fixed threshold tensor (bypasses the density model)."""
-    import functools
     from repro.core import scan as scan_lib
     q = queries.astype(jnp.float32)
     _, cids = filter_clusters(q, index.ivf, nprobe=nprobe)

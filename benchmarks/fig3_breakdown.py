@@ -7,7 +7,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import juno as juno_lib
 from repro.core import lut as lut_lib
 from repro.core import scan as scan_lib
 from repro.core import density as density_lib

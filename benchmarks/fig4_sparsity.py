@@ -4,8 +4,6 @@ closest to farthest entries — the spatial locality. The paper reports
 ~25-30% average usage and >90% coverage within the closest 50% of entries."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ivf import filter_clusters

@@ -3,7 +3,6 @@ top-100 and local point density (negative), and the polynomial regressor's
 fit quality — the dynamic-threshold machinery's calibration report."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -6,9 +6,15 @@ Prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+# support both `python -m benchmarks.run` and `python benchmarks/run.py`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 MODULES = [
     ("fig3_breakdown", "stage time breakdown (paper Fig. 3a)"),
@@ -27,7 +33,14 @@ def main() -> int:
     ap.add_argument("--only", default=None)
     ap.add_argument("--dataset", default="deep",
                     choices=["deep", "sift", "tti"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-N CI mode: every module runs in seconds; "
+                         "exit code is the number of failing modules")
     args = ap.parse_args()
+
+    if args.smoke:
+        from benchmarks import common
+        common.set_smoke_sizes()
 
     print("name,us_per_call,derived")
     failures = 0

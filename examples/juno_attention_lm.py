@@ -8,7 +8,6 @@ memory-traffic model that makes it a win on memory-bound decode.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import get_model

@@ -7,9 +7,7 @@ on a real pod.)
     PYTHONPATH=src python examples/train_smoke_lm.py [--steps 300]
 """
 import argparse
-import dataclasses
 
-from repro.configs import get_smoke_config
 from repro.launch.train import main as train_main
 
 

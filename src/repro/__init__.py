@@ -1,0 +1,7 @@
+"""JUNO reproduction (sparsity-aware ANN search + RT-core mapping, on JAX).
+
+Subpackages: ``core`` (the paper's algorithm), ``kernels`` (Pallas),
+``models``/``train``/``serve`` (the surrounding LM system), ``dist``
+(sharding / distributed index / checkpointing / fault tolerance),
+``launch`` (meshes + dry-run), ``configs``, ``data``.
+"""

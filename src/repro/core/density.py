@@ -7,7 +7,6 @@ fit with a closed-form least-squares solve (no sklearn dependency).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -9,7 +9,6 @@ vector replaces ``t_max`` (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .pq import PQCodebook

@@ -1,0 +1,18 @@
+"""Distribution substrate: activation sharding, the cluster-partitioned
+distributed JUNO index, checkpointing, fault tolerance and gradient
+compression.
+
+Mesh axes convention (shared with launch/mesh.py):
+  * "pod"   — outermost data-parallel axis (multi-pod meshes only)
+  * "data"  — data parallel / FSDP axis
+  * "model" — tensor/expert/sequence parallel axis
+The distributed ANN index shards its CLUSTER dimension over every mesh axis
+(a pure scale-out partition: each chip owns C/n_chips inverted lists).
+
+Every module degrades gracefully on a single device: ``sharding`` helpers
+are identity until ``enable()`` is called, and the index/checkpoint paths
+work on a trivial 1-device mesh.
+"""
+from . import checkpoint, compression, fault_tolerance, sharding  # noqa: F401
+from .distributed_index import (index_pspecs, make_distributed_search,  # noqa: F401
+                                shard_index)

@@ -1,0 +1,90 @@
+"""Gradient compression for cross-pod all-reduce.
+
+Two codecs over gradient pytrees:
+  * bf16 cast-through — halves DCI traffic, unbiased enough for AdamW (the
+    m/v accumulation absorbs the rounding noise).
+  * int8 with error feedback — 4× compression; the per-leaf quantization
+    residual is carried to the next step and added back before quantizing,
+    so the ACCUMULATED decompressed signal tracks the accumulated true
+    gradient (the EF-SGD guarantee).
+
+Compressed leaves are ``Int8Leaf(q, scale)`` NamedTuples — still a valid jax
+pytree, so the compressed tree can cross a ``jax.jit`` / collective boundary
+unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+# --------------------------------------------------------------------------
+# bf16 cast-through
+# --------------------------------------------------------------------------
+
+
+def compress_bf16(tree):
+    """Cast float leaves to bf16 (non-float leaves pass through)."""
+    return jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if _is_float(x) else x, tree)
+
+
+def decompress_bf16(tree):
+    """Cast float leaves back to f32."""
+    return jax.tree.map(
+        lambda x: x.astype(jnp.float32) if _is_float(x) else x, tree)
+
+
+# --------------------------------------------------------------------------
+# int8 with error feedback
+# --------------------------------------------------------------------------
+
+
+class Int8Leaf(NamedTuple):
+    q: jnp.ndarray       # int8 codes, same shape as the gradient leaf
+    scale: jnp.ndarray   # () f32 — per-leaf max-abs / 127
+
+
+def _is_int8_leaf(x) -> bool:
+    return isinstance(x, Int8Leaf)
+
+
+def compress_int8(tree, err: Optional[object] = None):
+    """Quantize float leaves to ``Int8Leaf`` with error feedback.
+
+    ``err`` is the residual pytree returned by the previous call (None on
+    the first step). Returns ``(compressed_tree, new_err)``.
+    """
+    if err is None:
+        err = jax.tree.map(
+            lambda x: jnp.zeros(x.shape if _is_float(x) else (), jnp.float32),
+            tree)
+
+    def one(g, e):
+        if not _is_float(g):
+            return g, jnp.zeros((), jnp.float32)
+        g_eff = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g_eff)) / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(g_eff / scale), -127, 127).astype(jnp.int8)
+        residual = g_eff - q.astype(jnp.float32) * scale
+        return Int8Leaf(q, scale), residual
+
+    flat_g, treedef = jax.tree.flatten(tree)
+    flat_e = treedef.flatten_up_to(err)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = treedef.unflatten([p[0] for p in pairs])
+    new_err = treedef.unflatten([p[1] for p in pairs])
+    return comp, new_err
+
+
+def decompress_int8(tree):
+    """Invert ``compress_int8`` (up to the quantization residual)."""
+    return jax.tree.map(
+        lambda x: x.q.astype(jnp.float32) * x.scale if _is_int8_leaf(x) else x,
+        tree, is_leaf=_is_int8_leaf)

@@ -1,0 +1,232 @@
+"""Process-global activation-sharding registry.
+
+The model code never takes a mesh argument: ``enable()`` registers the mesh
+plus the batch/SP policy once (dry-run, SP tests, production launch), and the
+helpers below become real ``with_sharding_constraint`` calls. When disabled
+(single-device tests, examples) every helper is an exact identity, so the
+unsharded path is untouched.
+
+Sequence parallelism (SP) follows the Korthikanti schedule: activations stay
+SEQ-SHARDED over the "model" axis between blocks; ``col_parallel_qkv`` /
+``fused_mlp`` gather the sequence internally exactly once (fwd all-gather,
+bwd reduce-scatter via the ``sp_gather`` custom-vjp pair) and
+``row_parallel`` / ``fused_mlp`` outputs return seq-sharded, so both
+directions move 1× traffic.
+
+All constraints are shape-aware: a mesh axis is silently dropped for a
+dimension it does not divide (batch=1 cells, kv-heads < model axis), exactly
+like launch/mesh.normalize_pspec — a constraint must never make a program
+unpartitionable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Mesh | None = None
+_BATCH_AXES: tuple | None = None
+_SP: bool = False
+_MODEL_AXIS: int = 1
+
+
+def enable(batch_axes, *, sp: bool = False, model_axis: int | None = None,
+           mesh: Mesh | None = None) -> None:
+    """Register activation shardings for subsequent model traces.
+
+    batch_axes: mesh axis names the batch dim is sharded over, e.g.
+    ``("data",)`` or ``("pod", "data")``. ``sp=True`` additionally shards the
+    sequence dim of (B, T, D) activations over "model" between blocks.
+    ``model_axis`` defaults to the mesh's "model" axis size.
+    """
+    global _MESH, _BATCH_AXES, _SP, _MODEL_AXIS
+    if mesh is None:
+        raise ValueError("enable() requires a mesh")
+    _MESH = mesh
+    _BATCH_AXES = tuple(batch_axes)
+    _SP = bool(sp)
+    if model_axis is None:
+        model_axis = dict(zip(mesh.axis_names, mesh.devices.shape)
+                          ).get("model", 1)
+    _MODEL_AXIS = int(model_axis)
+
+
+def disable() -> None:
+    global _MESH, _BATCH_AXES, _SP, _MODEL_AXIS
+    _MESH, _BATCH_AXES, _SP, _MODEL_AXIS = None, None, False, 1
+
+
+def batch_axes():
+    """The registered batch axes, or None while disabled."""
+    return _BATCH_AXES
+
+
+def model_axis() -> int:
+    """Size of the tensor/expert-parallel axis (1 while disabled or when
+    the registered mesh has no "model" axis)."""
+    return _MODEL_AXIS
+
+
+def mesh() -> Mesh | None:
+    """The registered mesh, or None while disabled."""
+    return _MESH
+
+
+# --------------------------------------------------------------------------
+# shape-aware constraint core
+# --------------------------------------------------------------------------
+
+
+def _norm_entry(entry, dim: int, sizes: dict):
+    """Drop axis names the mesh lacks or whose product doesn't divide dim."""
+    names = entry if isinstance(entry, tuple) else (
+        () if entry is None else (entry,))
+    names = tuple(n for n in names if n in sizes)
+    while names:
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        if dim % total == 0:
+            break
+        names = names[:-1]
+    if not names:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def constrain(x: jnp.ndarray, *entries) -> jnp.ndarray:
+    """with_sharding_constraint(x, P(*entries)) on the registered mesh;
+    identity when disabled or when x's rank doesn't match."""
+    if _MESH is None or getattr(x, "ndim", None) != len(entries):
+        return x
+    sizes = dict(zip(_MESH.axis_names, _MESH.devices.shape))
+    spec = P(*[_norm_entry(e, d, sizes) for e, d in zip(entries, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def _seq_axis():
+    return "model" if _SP else None
+
+
+# --------------------------------------------------------------------------
+# activation constraints
+# --------------------------------------------------------------------------
+
+
+def constrain_act(x: jnp.ndarray) -> jnp.ndarray:
+    """Canonical (B, T, D) activation layout: batch-sharded, and (under SP)
+    seq-sharded over "model" between blocks."""
+    return constrain(x, _BATCH_AXES, _seq_axis(), None)
+
+
+def constrain_batch(x: jnp.ndarray, *rest) -> jnp.ndarray:
+    """Shard dim 0 over the batch axes; trailing dims per ``rest``."""
+    return constrain(x, _BATCH_AXES, *rest)
+
+
+def constrain_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, H, hd) with heads sharded over "model" (head parallelism)."""
+    return constrain(x, _BATCH_AXES, None, "model", None)
+
+
+def seq_all_gather(x: jnp.ndarray) -> jnp.ndarray:
+    """Force a full (replicated-seq) view of a possibly seq-sharded (B, T, D)
+    activation — used in front of mixers that need the whole sequence (SSM,
+    MLA, hybrid)."""
+    return constrain(x, _BATCH_AXES, None, None)
+
+
+# --------------------------------------------------------------------------
+# SP gather/scatter custom-vjp pair (layout-only: values are untouched)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _sp_gather(x):
+    return constrain(x, _BATCH_AXES, None, None)
+
+
+def _sp_gather_fwd(x):
+    return _sp_gather(x), None
+
+
+def _sp_gather_bwd(_, ct):
+    # cotangent of a layout change is the identity; constraining it back to
+    # the seq-sharded layout lowers the bwd collective as reduce-scatter
+    # instead of all-reduce + slice (1× traffic).
+    return (constrain(ct, _BATCH_AXES, "model", None),)
+
+
+_sp_gather.defvjp(_sp_gather_fwd, _sp_gather_bwd)
+
+
+@jax.custom_vjp
+def _sp_scatter(x):
+    return constrain(x, _BATCH_AXES, "model", None)
+
+
+def _sp_scatter_fwd(x):
+    return _sp_scatter(x), None
+
+
+def _sp_scatter_bwd(_, ct):
+    return (constrain(ct, _BATCH_AXES, None, None),)
+
+
+_sp_scatter.defvjp(_sp_scatter_fwd, _sp_scatter_bwd)
+
+
+def sp_gather(x: jnp.ndarray) -> jnp.ndarray:
+    """Seq-sharded → full sequence (fwd AG over "model", bwd reduce-scatter).
+    Identity unless SP is enabled."""
+    if _MESH is None or not _SP:
+        return x
+    return _sp_gather(x)
+
+
+def sp_scatter(x: jnp.ndarray) -> jnp.ndarray:
+    """Full sequence → seq-sharded (the transpose of sp_gather)."""
+    if _MESH is None or not _SP:
+        return x
+    return _sp_scatter(x)
+
+
+# --------------------------------------------------------------------------
+# parallel projection helpers (column/row parallel + fused MLP)
+# --------------------------------------------------------------------------
+
+
+def col_parallel_qkv(x: jnp.ndarray, wq, wk, wv):
+    """x (B, T, D) — possibly seq-sharded under SP — → (q2, k2, v2) each
+    (B, T, heads·hd) column-sharded over "model". The internal sp_gather is
+    the single fwd all-gather of the Korthikanti schedule."""
+    if _MESH is None:
+        return x @ wq, x @ wk, x @ wv
+    xg = sp_gather(x)
+    q2 = constrain(xg @ wq, _BATCH_AXES, None, "model")
+    k2 = constrain(xg @ wk, _BATCH_AXES, None, "model")
+    v2 = constrain(xg @ wv, _BATCH_AXES, None, "model")
+    return q2, k2, v2
+
+
+def row_parallel(o2: jnp.ndarray, wo) -> jnp.ndarray:
+    """o2 (B, T, heads·hd) model-sharded on the contracting dim → (B, T, D)
+    partial-sum reduction; the output constraint (seq-sharded under SP)
+    lowers the reduction as reduce-scatter."""
+    if _MESH is None:
+        return o2 @ wo
+    o2 = constrain(o2, _BATCH_AXES, None, "model")
+    return constrain_act(o2 @ wo)
+
+
+def fused_mlp(x: jnp.ndarray, w_gate, w_in, w_out) -> jnp.ndarray:
+    """SwiGLU with column-parallel up projections and a row-parallel down
+    projection; one sp_gather in, seq-sharded out (SP)."""
+    if _MESH is None:
+        h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+        return h @ w_out
+    xg = sp_gather(x)
+    g = constrain(xg @ w_gate, _BATCH_AXES, None, "model")
+    u = constrain(xg @ w_in, _BATCH_AXES, None, "model")
+    h = jax.nn.silu(g) * u
+    return constrain_act(h @ w_out)

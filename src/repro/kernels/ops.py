@@ -15,7 +15,6 @@ from . import hit_count as _hit
 from . import ivf_filter as _filt
 from . import pq_scan as _scan
 from . import selective_lut as _lut
-from . import ref as _ref
 
 
 @functools.cache

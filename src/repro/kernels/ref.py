@@ -5,7 +5,6 @@ shapes/dtypes and assert_allclose against these.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -1,0 +1,5 @@
+"""Launch tooling: mesh construction, shapes, analytics, dry-run, trainer.
+
+Deliberately empty of imports: ``launch.dryrun`` pins XLA_FLAGS at import
+time and must only be imported by entry points that want 512 host devices.
+"""

@@ -15,14 +15,13 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh both] [--outdir experiments/dryrun]
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
 from repro.dist import sharding as act_sharding
@@ -76,11 +75,9 @@ def analytic_bytes_per_chip(schema, mesh) -> int:
 
 def _model_flops(cfg, schema, shape) -> float:
     """6·N·D (train) / 2·N·D (inference) with MoE active-expert scaling."""
-    from repro.models.params import n_params as count
-
     def leaf_count(tree):
         total, active = 0, 0
-        for path, s in jax.tree.flatten_with_path(
+        for path, s in jax.tree_util.tree_flatten_with_path(
                 tree, is_leaf=lambda x: isinstance(x, Spec))[0]:
             n = 1
             for d in s.shape:
@@ -107,13 +104,11 @@ def lower_juno_cell(multi_pod: bool) -> dict:
     """The paper's own system at pod scale: distributed JUNO search over a
     100M-point index (deep-like: D=96, C=65536, E=256, S=48), clusters
     sharded over all chips, JUNO-H2 mode. Abstract index — no allocation."""
-    import numpy as _np
     from repro.core.density import DensityModel
     from repro.core.ivf import IVFIndex
     from repro.core.juno import JunoIndexData
     from repro.core.pq import PQCodebook
-    from repro.dist.distributed_index import (index_pspecs,
-                                              make_distributed_search)
+    from repro.dist.distributed_index import make_distributed_search
 
     n, d, c, e, s, g = 100_000_000, 96, 65_536, 256, 48, 64
     p_cap = 6144            # 4× mean cluster size, padded layout
@@ -173,7 +168,7 @@ def lower_juno_cell(multi_pod: bool) -> dict:
             flops, hbm, summary["total_link_bytes_per_chip"], n_chips)
         result.update({
             "compile_s": round(time.time() - t0, 1),
-            "raw_cost_flops": float((cost or {}).get("flops", 0.0)),
+            "raw_cost_flops": float(_cost_dict(cost).get("flops", 0.0)),
             "analytic_flops_per_chip": flops,
             "analytic_hbm_bytes_per_chip": hbm,
             "collectives": summary, "roofline": terms,
@@ -230,8 +225,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
         colls = hlo_analysis.parse_collectives(hlo)
         summary = hlo_analysis.collective_summary(colls)
-        raw_flops = float((cost or {}).get("flops", 0.0))
-        raw_bytes = float((cost or {}).get("bytes accessed", 0.0))
+        raw_flops = float(_cost_dict(cost).get("flops", 0.0))
+        raw_bytes = float(_cost_dict(cost).get("bytes accessed", 0.0))
         loop_corr = hlo_analysis.loop_correction_factor(hlo)
 
         # analytic compute/memory terms (cost_analysis counts loop bodies
@@ -270,6 +265,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     finally:
         act_sharding.disable()
     return result
+
+
+def _cost_dict(cost) -> dict:
+    """Normalize compiled.cost_analysis() across jax versions (dict vs
+    one-element list of dicts)."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 def _mem_dict(mem) -> dict:

@@ -10,15 +10,14 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.data.tokens import make_batch
 from repro.dist import checkpoint as ckpt_lib
 from repro.dist.fault_tolerance import StepWatchdog
 from repro.models import get_model
-from repro.train import (AdamWConfig, TrainConfig, TrainState,
-                         init_train_state, make_train_step)
+from repro.train import (AdamWConfig, TrainConfig, init_train_state,
+                         make_train_step)
 
 
 def main(argv=None):
@@ -67,6 +66,10 @@ def main(argv=None):
               + (f" [{status}]" if status != "ok" else ""), flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             ckpt_lib.save(args.ckpt_dir, step + 1, state)
+    if not losses:                  # resumed at or past --steps: no-op run
+        print(f"nothing to do: resumed at step {start} >= --steps "
+              f"{args.steps}")
+        return losses
     if args.ckpt_dir:
         ckpt_lib.save(args.ckpt_dir, args.steps, state)
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")

@@ -6,7 +6,6 @@ O(chunk^2) live scores instead of O(S^2). bf16 compute, f32 softmax state.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

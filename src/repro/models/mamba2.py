@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .config import ModelConfig, SSMConfig
+from .config import ModelConfig
 from .layers import rms_norm
 from .params import Spec
 

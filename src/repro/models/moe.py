@@ -45,8 +45,9 @@ def moe_ffn(x: jnp.ndarray, p: dict, moe: MoEConfig) -> jnp.ndarray:
     (EXPERIMENTS.md §Perf headroom note); the EP path reduces exactly one
     (B, T, D) partial sum per layer."""
     from repro.dist import sharding as shmod
-    if shmod._MESH is not None and shmod.batch_axes() is not None \
-            and moe.n_experts % shmod._MODEL_AXIS == 0:
+    if shmod.mesh() is not None and shmod.batch_axes() is not None \
+            and shmod.model_axis() > 1 \
+            and moe.n_experts % shmod.model_axis() == 0:
         return _moe_ffn_ep(x, p, moe)
     return _moe_ffn_dense(x, p, moe)
 
@@ -55,13 +56,12 @@ def _moe_ffn_ep(x: jnp.ndarray, p: dict, moe: MoEConfig) -> jnp.ndarray:
     """Expert-parallel shard_map: tokens replicated over "model", each model
     shard dispatches ONLY to its E/16 local experts and contributes a
     partial combine; one psum over "model" finishes the layer."""
-    import functools
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.dist import sharding as shmod
 
     b, t, d = x.shape
-    n_exp_local = moe.n_experts // shmod._MODEL_AXIS
+    n_exp_local = moe.n_experts // shmod.model_axis()
     batch = shmod.batch_axes()
 
     def local(xl, router, wg, wi, wo):
@@ -105,7 +105,7 @@ def _moe_ffn_ep(x: jnp.ndarray, p: dict, moe: MoEConfig) -> jnp.ndarray:
         return y.reshape(xl.shape)
 
     y = shard_map(
-        local, mesh=shmod._MESH,
+        local, mesh=shmod.mesh(),
         in_specs=(P(batch, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
@@ -154,8 +154,8 @@ def _moe_ffn_dense(x: jnp.ndarray, p: dict, moe: MoEConfig) -> jnp.ndarray:
     # over "data" (measured 2.7 GB f32 all-reduces/layer on deepseek-v2-lite
     # — §Perf headroom note); gathering the 0.4 GB/layer weights instead is
     # the right trade by ~7×.
-    from repro.dist.sharding import batch_axes
-    if batch_axes() is not None:
+    from repro.dist.sharding import batch_axes, model_axis
+    if batch_axes() is not None and model_axis() > 1:
         from jax.sharding import PartitionSpec as _P
         ep = _P("model", None, None)
         p = dict(p, w_gate=jax.lax.with_sharding_constraint(p["w_gate"], ep),

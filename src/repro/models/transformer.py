@@ -10,8 +10,7 @@ Layout invariants:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +20,7 @@ from . import layers, mamba2, mla as mla_lib, moe as moe_lib
 from .config import ModelConfig
 from .params import Spec, cast_floats, stack
 from repro.dist.sharding import (col_parallel_qkv, constrain_act,
-                                 constrain_batch, fused_mlp, row_parallel,
-                                 seq_all_gather, sp_gather, sp_scatter)
+                                 fused_mlp, row_parallel, seq_all_gather)
 
 # --------------------------------------------------------------------------
 # schemas

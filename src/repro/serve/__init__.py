@@ -1,0 +1,1 @@
+from .engine import Request, ServeEngine  # noqa: F401

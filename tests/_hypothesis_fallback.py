@@ -1,0 +1,78 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (used only when the
+real package is unavailable — e.g. hermetic containers; CI installs the real
+thing).
+
+Implements exactly the surface this repo's tests use: ``@settings``,
+``@given`` with positional strategies, and ``st.integers`` / ``st.floats`` /
+``st.sampled_from`` / ``st.booleans``. Examples are drawn from a fixed-seed
+PRNG, always including the strategy's boundary values, so failures are
+reproducible (no shrinking)."""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = tuple(boundaries)
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     boundaries=(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     boundaries=(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements),
+                     boundaries=(elements[0],))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, boundaries=(False, True))
+
+
+class strategies:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings is applied OUTSIDE @given, so it stamps the wrapper
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            rng = random.Random(0xC0FFEE)
+            # boundary case first (min of every strategy), then random draws
+            examples = [tuple(s.boundaries[0] for s in strats)]
+            examples += [tuple(s.example(rng) for s in strats)
+                         for _ in range(max(0, n - 1))]
+            for ex in examples:
+                fn(*args, *ex, **kwargs)
+        # pytest must not see the strategy parameters as fixtures: drop the
+        # signature forwarding functools.wraps sets up.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -1,0 +1,18 @@
+"""Test-suite bootstrap: register markers and, when the real ``hypothesis``
+package is missing (hermetic container), alias the deterministic fallback in
+``tests/_hypothesis_fallback.py`` into ``sys.modules`` before test modules
+import it. CI installs real hypothesis, so the fallback is exercised only
+where pip installs are unavailable."""
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    sys.modules["hypothesis"] = _hypothesis_fallback
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (minutes on CPU)")

@@ -10,7 +10,7 @@ from repro.core import lut as lut_lib
 from repro.core import scan as scan_lib
 from repro.core.ivf import build_ivf, filter_clusters
 from repro.core.kmeans import kmeans, assign
-from repro.core.pq import train_codebook, encode, decode, split_subspaces
+from repro.core.pq import train_codebook, encode, decode
 from repro.data import make_dataset, DEEP_LIKE, TTI_LIKE
 
 

@@ -10,7 +10,6 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ops, ref
 from repro.kernels.pq_scan import pq_scan
 from repro.kernels.hit_count import hit_count
-from repro.kernels.selective_lut import selective_lut
 
 
 def _inputs(key, b, s, e, p, tau_scale=1.0):
@@ -158,7 +157,11 @@ def test_ivf_filter_sweep(shape, metric):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-4)
     if metric == "l2":  # rank-equivalence with true distances
-        true_d = jnp.sum((q[:, None] - cents[None]) ** 2, -1)
-        np.testing.assert_array_equal(
-            np.argsort(np.asarray(got), axis=1),
-            np.argsort(np.asarray(true_d), axis=1))
+        # tie-tolerant: the ordering induced by the kernel scores must be a
+        # valid sort of the true distances (exact argsort equality is not
+        # stable for centroid pairs closer than f32 resolution)
+        true_d = np.asarray(jnp.sum((q[:, None] - cents[None]) ** 2, -1))
+        true_at_rank = np.take_along_axis(
+            true_d, np.argsort(np.asarray(got), axis=1), axis=1)
+        np.testing.assert_allclose(true_at_rank, np.sort(true_d, axis=1),
+                                   rtol=1e-5, atol=1e-4)

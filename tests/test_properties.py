@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import density as density_lib
 from repro.core import lut as lut_lib
 from repro.core.metrics import recall_1_at_k, recall_n_at_k
-from repro.core.pq import PQCodebook, decode, encode, train_codebook
+from repro.core.pq import decode, encode, train_codebook
 from repro.core.ref import exact_topk
 from repro.models.mamba2 import ssd_chunked
 
