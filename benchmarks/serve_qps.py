@@ -1,0 +1,179 @@
+"""QPS/latency of the online ANN serving engine under a mixed workload.
+
+Replays a request trace (many small queries with mixed k/mode/recall-target
+knobs) through ``repro.serve.ann.AnnServeEngine`` with insert batches
+interleaved between waves — the online-serving shape — and compares against
+the seed baseline: one single-shot ``core.search()`` call per request, no
+batching, query-only. The engine must win on throughput (dynamic batching
+amortizes dispatch and fills the batch dimension) while also absorbing the
+inserts; ``--check``/``--smoke`` turn that into a hard gate.
+
+    PYTHONPATH=src python benchmarks/serve_qps.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks import common  # noqa: E402
+from repro.core import search  # noqa: E402
+from repro.serve.ann import AnnServeEngine  # noqa: E402
+
+# request trace knobs: (n_queries, k, mode, recall_target) cycled over
+REQUEST_MIX = [
+    (4, 10, "auto", 0.95),   # → H
+    (2, 10, "auto", 0.85),   # → H2
+    (8, 10, "auto", 0.55),   # → M
+    (16, 10, "auto", 0.30),  # → L
+    (1, 10, "H", 0.0),
+    (4, 10, "H", 0.0),
+]
+
+
+def _make_trace(queries: np.ndarray, n_requests: int):
+    trace, pos = [], 0
+    for r in range(n_requests):
+        nq, k, mode, target = REQUEST_MIX[r % len(REQUEST_MIX)]
+        rows = np.take(queries, range(pos, pos + nq), axis=0, mode="wrap")
+        trace.append((rows, k, mode, target))
+        pos += nq
+    return trace
+
+
+def run(dataset: str = "deep", n_requests: int = 96, insert_every: int = 12,
+        insert_batch: int = 8) -> dict:
+    pts, queries, index, gt, cfg = common.get_bench_index(dataset)
+    queries = np.asarray(queries)
+    trace = _make_trace(queries, n_requests)
+    rng = np.random.default_rng(0)
+    d = queries.shape[1]
+    new_points = (np.asarray(pts)[:insert_batch].mean(0)[None] +
+                  rng.standard_normal(
+                      (n_requests // insert_every * insert_batch, d))
+                  ).astype(np.float32)
+
+    # CPU-sized buckets: on this backend per-query cost grows with batch, so
+    # right-sizing beats maximal batching (on TPU the default (8,32,128)
+    # buckets fill the batch dim instead)
+    engine = AnnServeEngine(index, metric=cfg.metric, side_capacity=512,
+                            batch_buckets=(8, 16, 32))
+
+    # resolve each request exactly as the engine will, so the baseline runs
+    # the same kernels with the same knobs — minus batching and mutability
+    resolved = [engine.route(engine.submit(q, k=k, mode=m, recall_target=t))
+                for q, k, m, t in trace]
+    engine.queue.clear()
+    engine.completed.clear()
+
+    # --- warm every jit signature both paths will hit (compile time out):
+    # one full untimed replay for the engine (all batch buckets + the
+    # side≠None trace), one pass over the request mix for the baselines
+    for q, (k, mode, nprobe) in zip([t[0] for t in trace[:len(REQUEST_MIX)]],
+                                    resolved[:len(REQUEST_MIX)]):
+        search(index, q, nprobe=nprobe, k=k, mode=mode, metric=cfg.metric)
+        search(index, q, nprobe=nprobe, k=k, mode=mode, metric=cfg.metric,
+               batch=q.shape[0])
+    for start in range(0, n_requests, insert_every):
+        for (q, k, m, t) in trace[start:start + insert_every]:
+            engine.submit(q, k=k, mode=m, recall_target=t)
+        engine.run()
+    engine.insert(new_points[:insert_batch])
+    # FORCE a spill, then replay one full wave: the engine elides an empty
+    # side buffer, so side≠None programs are distinct traces — if the first
+    # spill happened mid-measurement, every active signature would recompile
+    # inside the timed region and could flip the --smoke gate spuriously
+    mid = engine.index
+    n_clusters = mid.data.ivf.point_ids.shape[0]
+    c = int(np.argmin([mid.free_slots(cc) for cc in range(n_clusters)]))
+    cent = np.asarray(mid.data.ivf.centroids[c])
+    spillers = (cent[None] + 0.01 * rng.standard_normal(
+        (mid.free_slots(c) + 1, d))).astype(np.float32)
+    engine.insert(spillers)
+    assert mid.side_fill >= 1, "warmup spill failed"
+    for (q, k, m, t) in trace[:insert_every]:
+        engine.submit(q, k=k, mode=m, recall_target=t)
+    engine.run()
+    engine.completed.clear()
+    n_warm_q = engine.stats["queries"]
+    total_q = sum(t[0].shape[0] for t in trace)
+
+    # --- baseline A (the acceptance comparator): seed single-shot search()
+    # exactly as a seed-repo client would call it per request — default
+    # batch (64) padding and all
+    t0 = time.perf_counter()
+    for (q, _, _, _), (k, mode, nprobe) in zip(trace, resolved):
+        search(index, q, nprobe=nprobe, k=k, mode=mode, metric=cfg.metric)
+    t_base = time.perf_counter() - t0
+    base_qps = total_q / t_base
+
+    # --- baseline B (informational): single-shot with exact-size batches --
+    t0 = time.perf_counter()
+    for (q, _, _, _), (k, mode, nprobe) in zip(trace, resolved):
+        search(index, q, nprobe=nprobe, k=k, mode=mode, metric=cfg.metric,
+               batch=q.shape[0])
+    exact_qps = total_q / (time.perf_counter() - t0)
+
+    # --- engine: dynamic batching + interleaved inserts -------------------
+    t0 = time.perf_counter()
+    ins_pos = insert_batch  # first batch consumed by warmup
+    for start in range(0, n_requests, insert_every):
+        for (q, k, m, t) in trace[start:start + insert_every]:
+            engine.submit(q, k=k, mode=m, recall_target=t)
+        engine.run()
+        if ins_pos < len(new_points):
+            engine.insert(new_points[ins_pos:ins_pos + insert_batch])
+            ins_pos += insert_batch
+    t_eng = time.perf_counter() - t0
+    eng_qps = total_q / t_eng
+    lat = engine.latency_stats()
+
+    common.emit("serve_qps.baseline_single_shot", t_base / n_requests * 1e6,
+                f"qps={base_qps:.0f}")
+    common.emit("serve_qps.baseline_exact_batch", 0.0,
+                f"qps={exact_qps:.0f}")
+    common.emit("serve_qps.engine_mixed", t_eng / n_requests * 1e6,
+                f"qps={eng_qps:.0f};speedup={eng_qps / base_qps:.2f}x;"
+                f"p50_ms={lat['p50'] * 1e3:.1f};p95_ms={lat['p95'] * 1e3:.1f};"
+                f"inserted={engine.stats['inserts']};"
+                f"side_fill={engine.index.side_fill}")
+    common.emit("serve_qps.batching",
+                engine.stats["queries"] - n_warm_q,
+                f"ticks={engine.stats['ticks']};"
+                f"signatures={len(engine.stats['signatures'])};"
+                f"padded_rows={engine.stats['padded_rows']}")
+    return {"base_qps": base_qps, "eng_qps": eng_qps, "lat": lat}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="deep",
+                    choices=["deep", "sift", "tti"])
+    ap.add_argument("--n-requests", type=int, default=96)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-N CI mode; implies --check")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless engine QPS >= single-shot QPS")
+    args = ap.parse_args()
+    if args.smoke:
+        common.set_smoke_sizes()
+    print("name,us_per_call,derived")
+    res = run(dataset=args.dataset, n_requests=args.n_requests)
+    ok = res["eng_qps"] >= res["base_qps"]
+    print(f"# engine {res['eng_qps']:.0f} QPS vs single-shot "
+          f"{res['base_qps']:.0f} QPS -> {'OK' if ok else 'REGRESSION'}",
+          file=sys.stderr)
+    if (args.check or args.smoke) and not ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,9 +3,11 @@ primary contribution), implemented as composable JAX modules.
 
 Public API:
     JunoConfig, build, search          — end-to-end index (juno.py)
+    MutableJunoIndex, SideBuffer       — online insert/delete/compact (juno.py)
     exact_topk                         — brute-force oracle (ref.py)
     recall_1_at_k, recall_n_at_k       — paper metrics (metrics.py)
 """
-from .juno import JunoConfig, JunoIndexData, build, search  # noqa: F401
+from .juno import (JunoConfig, JunoIndexData, MutableJunoIndex,  # noqa: F401
+                   SideBuffer, build, empty_side_buffer, search)
 from .ref import exact_topk  # noqa: F401
 from .metrics import recall_1_at_k, recall_n_at_k  # noqa: F401

@@ -27,6 +27,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import density as density_lib
 from . import lut as lut_lib
@@ -57,6 +58,57 @@ class JunoIndexData(NamedTuple):
     cluster_codes: jnp.ndarray   # (C, P, S) uint8 — padded per-cluster codes
     density: density_lib.DensityModel
     points_sq: jnp.ndarray       # (N,) f32 (kept for oracles/rerank)
+
+
+class SideBuffer(NamedTuple):
+    """Fixed-capacity exact-membership overflow store for online inserts.
+
+    When an insert's owning cluster has no free padded slot left, the point
+    spills here instead of forcing a rebuild. Side points are scored during
+    search with the SAME masked-LUT / hit-table gather an in-cluster point
+    would receive (and only when their owning cluster is probed), so
+    ``compact()`` — which moves them back into freed cluster slots — is a
+    search no-op.
+    """
+    codes: jnp.ndarray     # (B, S) uint8 — PQ codes of spilled points
+    cluster: jnp.ndarray   # (B,) int32 — owning cluster (-1 = empty slot)
+    ids: jnp.ndarray       # (B,) int32 — global point id
+    valid: jnp.ndarray     # (B,) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[0]
+
+
+def empty_side_buffer(capacity: int, n_subspaces: int) -> SideBuffer:
+    return SideBuffer(
+        codes=jnp.zeros((capacity, n_subspaces), jnp.uint8),
+        cluster=jnp.full((capacity,), -1, jnp.int32),
+        ids=jnp.full((capacity,), -1, jnp.int32),
+        valid=jnp.zeros((capacity,), bool))
+
+
+def _side_gather(table: jnp.ndarray, cids: jnp.ndarray, side: SideBuffer
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Score side-buffer points against a per-probe LUT/hit table.
+
+    table (Q, np, S, E), cids (Q, np). A side point participates only when
+    its owning cluster is among the probed clusters — exactly the condition
+    under which it would have been scanned had it lived in its cluster's
+    padded slots — and its score is the same gather+sum the in-cluster scan
+    performs, so folding it back via ``compact()`` changes nothing.
+
+    Returns (totals (Q, B), probe (Q, B), ok (Q, B)).
+    """
+    nq = cids.shape[0]
+    match = cids[:, :, None] == side.cluster[None, None, :]      # (Q, np, B)
+    ok = jnp.any(match, axis=1) & side.valid[None, :]            # (Q, B)
+    probe = jnp.argmax(match, axis=1)                            # (Q, B)
+    qi = jnp.arange(nq)[:, None, None]
+    si = jnp.arange(table.shape[2])[None, None, :]
+    codes = side.codes.astype(jnp.int32)[None, :, :]             # (1, B, S)
+    vals = table[qi, probe[:, :, None], si, codes]               # (Q, B, S)
+    return jnp.sum(vals, axis=-1), probe, ok
 
 
 def build(points: jnp.ndarray, config: JunoConfig,
@@ -92,9 +144,10 @@ def _calibrate_density(pts, residuals, codebook, codes, ivf, config, key):
     """Fit density → threshold polynomial from ground-truth top-k (paper §4.1)."""
     n = pts.shape[0]
     nq = min(config.calib_queries, n)
-    qidx = jax.random.choice(key, n, shape=(nq,), replace=False)
+    k_choice, k_noise = jax.random.split(key)
+    qidx = jax.random.choice(k_choice, n, shape=(nq,), replace=False)
     # perturb so calibration queries are not exact database points
-    noise = 0.01 * jax.random.normal(key, (nq, pts.shape[1])) * jnp.std(pts)
+    noise = 0.01 * jax.random.normal(k_noise, (nq, pts.shape[1])) * jnp.std(pts)
     queries = pts[qidx] + noise.astype(jnp.float32)
 
     _, gt_ids = exact_topk(queries, pts, k=config.calib_topk,
@@ -132,11 +185,13 @@ def _calibrate_density(pts, residuals, codebook, codes, ivf, config, key):
                    static_argnames=("nprobe", "k", "mode", "metric", "impl"))
 def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
                   k: int, mode: str, metric: str, thres_scale: float,
-                  impl: str = "ref"):
+                  impl: str = "ref", side: SideBuffer | None = None):
     """One jitted query batch. Returns (scores (Q,k), ids (Q,k)).
 
     impl="ref"    — pure-jnp reference path (semantics of record)
     impl="pallas" — fused Pallas kernels (TPU path; interpret=True on CPU)
+    side          — optional overflow buffer of online inserts, merged into
+                    the final top-k with in-cluster-identical scoring.
     """
     q = queries.astype(jnp.float32)
     nq = q.shape[0]
@@ -202,6 +257,23 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
 
     flat_scores = pt_scores.reshape(nq, -1)
     flat_ids = ids.reshape(nq, -1)
+    if side is not None:
+        # overflow inserts: same per-probe table, same gather+sum, same
+        # invalid sentinel — only reachable when the owning cluster is probed
+        if mode == "H":
+            tot, probe, ok = _side_gather(mlut, cids, side)
+            if metric == "ip":
+                tot = tot + jnp.take_along_axis(probe_base, probe, axis=1)
+            side_scores = jnp.where(ok, tot,
+                                    -jnp.inf if higher_better else jnp.inf)
+        else:
+            tot, _, ok = _side_gather(table.astype(jnp.int32), cids, side)
+            side_scores = jnp.where(ok, tot, jnp.int32(-(2 ** 30))
+                                    ).astype(jnp.float32)
+        flat_scores = jnp.concatenate([flat_scores, side_scores], axis=1)
+        flat_ids = jnp.concatenate(
+            [flat_ids, jnp.broadcast_to(side.ids[None], (nq, side.capacity))],
+            axis=1)
     sel_scores, sel = jax.lax.top_k(
         flat_scores if higher_better else -flat_scores, k)
     out_ids = jnp.take_along_axis(flat_ids, sel, axis=1)
@@ -214,7 +286,8 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
 def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
                             nprobe: int, k: int, metric: str,
                             thres_scale: float, rerank: int = 0,
-                            impl: str = "ref"):
+                            impl: str = "ref",
+                            side: SideBuffer | None = None):
     """Mode "H2": int8 hit-count prefilter → exact ADC on top-C survivors.
 
     Beyond-paper: converts JUNO's dynamic skip into a static-shape candidate
@@ -273,8 +346,23 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
                 s_idx, cand_codes.astype(jnp.int32)]             # (Q, C, S)
     exact = jnp.sum(vals, axis=-1)
     cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
+    cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
     if metric == "ip":
         exact = exact + jnp.take_along_axis(probe_base, cand_probe, axis=1)
+    if side is not None:
+        # side points bypass stage 1 (the buffer is tiny) and join the exact
+        # rerank pool directly, scored identically to in-cluster survivors
+        tot, probe, ok = _side_gather(mlut, cids, side)
+        if metric == "ip":
+            tot = tot + jnp.take_along_axis(probe_base, probe, axis=1)
+        exact = jnp.concatenate(
+            [exact, jnp.where(ok, tot, -jnp.inf if metric == "ip" else jnp.inf)],
+            axis=1)
+        cand_valid = jnp.concatenate([cand_valid, ok], axis=1)
+        cand_ids = jnp.concatenate(
+            [cand_ids, jnp.broadcast_to(side.ids[None], (nq, side.capacity))],
+            axis=1)
+    if metric == "ip":
         exact = jnp.where(cand_valid, exact, -jnp.inf)
         sel_s, sel = jax.lax.top_k(exact, k)
         out_scores = sel_s
@@ -282,7 +370,6 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
         exact = jnp.where(cand_valid, exact, jnp.inf)
         sel_s, sel = jax.lax.top_k(-exact, k)
         out_scores = -sel_s
-    cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
     out_ids = jnp.take_along_axis(cand_ids, sel, axis=1)
     return out_scores, out_ids
 
@@ -290,7 +377,7 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
 def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
            k: int = 100, mode: str = "H", metric: str = "l2",
            thres_scale: float = 1.0, batch: int = 64, impl: str = "ref",
-           rerank: int = 0):
+           rerank: int = 0, side: SideBuffer | None = None):
     """Public search API — chunks queries through the jitted batch kernel."""
     nq = queries.shape[0]
     out_s, out_i = [], []
@@ -298,15 +385,257 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
         qb = queries[i:i + batch]
         pad = batch - qb.shape[0]
         if pad:
-            qb = jnp.pad(qb, ((0, pad), (0, 0)))
+            # replicate the last real query instead of zero-padding: a zero
+            # row is out-of-distribution garbage work and, under metric="ip",
+            # degenerate (every score 0) — edge rows are real queries whose
+            # results we slice off anyway.
+            qb = jnp.pad(qb, ((0, pad), (0, 0)), mode="edge")
         if mode == "H2":
             s, ids = _search_batch_two_stage(
                 index, qb, nprobe=nprobe, k=k, metric=metric,
-                thres_scale=thres_scale, rerank=rerank, impl=impl)
+                thres_scale=thres_scale, rerank=rerank, impl=impl, side=side)
         else:
             s, ids = _search_batch(index, qb, nprobe=nprobe, k=k, mode=mode,
                                    metric=metric, thres_scale=thres_scale,
-                                   impl=impl)
+                                   impl=impl, side=side)
         out_s.append(s[:batch - pad])
         out_i.append(ids[:batch - pad])
     return jnp.concatenate(out_s), jnp.concatenate(out_i)
+
+
+@jax.jit
+def _label_encode(pts: jnp.ndarray, centroids: jnp.ndarray,
+                  codebook: PQCodebook) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert-time (labels, codes) for a small batch, fully under one jit.
+
+    ``kmeans.assign`` is an eager ``lax.map`` pipeline tuned for N≫chunk
+    offline builds; per-insert it would pay ~50ms of retracing for a
+    microseconds-sized matmul. Insert batches are small, so the dense
+    distance matrix is the right shape here.
+    """
+    d = (jnp.sum(centroids * centroids, -1)[None, :]
+         - 2.0 * pts @ centroids.T)
+    labels = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    return labels, encode(pts - centroids[labels], codebook)
+
+
+
+
+class MutableIndexBase:
+    """Host-side slot bookkeeping shared by the single-device and sharded
+    mutable indices (`MutableJunoIndex`, `dist.DistributedMutableIndex`).
+
+    The control plane is identical in both: per-cluster free-slot lists, an
+    id → (cluster, slot) map (cluster −1 = side-buffer position), and a
+    plan-then-commit discipline so a failing ``insert``/``delete`` raises
+    BEFORE any state — host or device — has been touched. Subclasses supply
+    the data plane via ``_labels_codes`` (insert-time encoding) and
+    ``_apply_insert``/``_apply_delete`` (device scatters).
+    """
+
+    side: SideBuffer
+
+    def _init_bookkeeping(self, ivf_valid, point_ids, *, side_capacity: int,
+                          first_new_id: int, n_subspaces: int) -> None:
+        valid = np.asarray(ivf_valid)
+        pids = np.asarray(point_ids)
+        n_clusters = valid.shape[0]
+        self.side = empty_side_buffer(side_capacity, n_subspaces)
+        self._free = [list(np.where(~valid[c])[0][::-1])
+                      for c in range(n_clusters)]
+        #: id -> (cluster, slot); cluster == -1 means side-buffer position
+        self._loc: dict[int, tuple[int, int]] = {}
+        for c in range(n_clusters):
+            for slot in np.where(valid[c])[0]:
+                self._loc[int(pids[c, slot])] = (c, int(slot))
+        self._side_free = list(range(side_capacity))[::-1]
+        self._next_id = first_new_id
+
+    # ---- data-plane hooks (subclass responsibility) ----------------------
+    def _labels_codes(self, pts: jnp.ndarray):
+        raise NotImplementedError
+
+    def _apply_insert(self, cl: list[int], sl: list[int], ids: np.ndarray,
+                      codes: jnp.ndarray) -> None:
+        raise NotImplementedError
+
+    def _apply_delete(self, cl: list[int], sl: list[int]) -> None:
+        raise NotImplementedError
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return len(self._loc)
+
+    @property
+    def side_fill(self) -> int:
+        return self.side.capacity - len(self._side_free)
+
+    def free_slots(self, cluster: int) -> int:
+        return len(self._free[cluster])
+
+    # ---- mutation --------------------------------------------------------
+    def insert(self, points) -> list[int]:
+        """Insert a (B, D) batch; returns the assigned global ids.
+
+        Raises RuntimeError (before mutating anything) if the batch cannot
+        be placed — i.e. some owning cluster is full AND the side buffer
+        cannot absorb the remainder; call ``compact()`` or build with a
+        larger ``side_capacity``.
+        """
+        pts = jnp.atleast_2d(jnp.asarray(points, jnp.float32))
+        labels, codes = self._labels_codes(pts)                  # (B,), (B, S)
+        labels = np.asarray(labels)
+
+        # plan (no mutation yet) — per-cluster free slots, then side buffer
+        taken: dict[int, int] = {}
+        side_need = 0
+        placements: list[tuple[int, int]] = []   # (cluster, slot) | (-1, pos)
+        for c in labels:
+            c = int(c)
+            used = taken.get(c, 0)
+            if used < len(self._free[c]):
+                placements.append((c, self._free[c][-1 - used]))
+                taken[c] = used + 1
+            elif side_need < len(self._side_free):
+                placements.append((-1, self._side_free[-1 - side_need]))
+                side_need += 1
+            else:
+                raise RuntimeError(
+                    "insert batch does not fit: cluster padding and side "
+                    "buffer exhausted — call compact() or raise side_capacity")
+
+        # commit
+        new_ids = list(range(self._next_id, self._next_id + pts.shape[0]))
+        self._next_id += pts.shape[0]
+        cl, sl, sel, s_pos, s_sel = [], [], [], [], []
+        for i, (c, slot) in enumerate(placements):
+            # plan took slots from the free lists' tails in order, so pop()
+            # yields exactly the planned slot in O(1) (never inside an
+            # assert — those vanish under python -O)
+            if c >= 0:
+                popped = self._free[c].pop()
+                cl.append(c)
+                sl.append(slot)
+                sel.append(i)
+                self._loc[new_ids[i]] = (c, slot)
+            else:
+                popped = self._side_free.pop()
+                s_pos.append(slot)
+                s_sel.append(i)
+                self._loc[new_ids[i]] = (-1, slot)
+            if popped != slot:
+                raise AssertionError(
+                    f"slot plan/commit desync: planned {slot}, got {popped}")
+        ids_np = np.asarray(new_ids, np.int32)
+        if cl:
+            self._apply_insert(cl, sl, ids_np[sel], codes[jnp.asarray(sel)])
+        if s_pos:
+            pos_j, sel_j = jnp.asarray(s_pos), jnp.asarray(s_sel)
+            self.side = self.side._replace(
+                codes=self.side.codes.at[pos_j].set(codes[sel_j]),
+                cluster=self.side.cluster.at[pos_j].set(
+                    jnp.asarray(labels[s_sel], jnp.int32)),
+                ids=self.side.ids.at[pos_j].set(jnp.asarray(ids_np[s_sel])),
+                valid=self.side.valid.at[pos_j].set(True))
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone points by global id. Freed cluster slots become insert
+        targets; no data movement. An unknown/already-deleted/duplicated id
+        raises KeyError BEFORE any state is touched (all-or-nothing)."""
+        pids = [int(p) for p in np.atleast_1d(np.asarray(ids, np.int64))]
+        if len(set(pids)) != len(pids):
+            raise KeyError(f"duplicate ids in delete batch: {pids}")
+        locs = [self._loc[p] for p in pids]      # KeyError = unknown id
+        cl, sl, s_pos = [], [], []
+        for pid, (c, slot) in zip(pids, locs):
+            del self._loc[pid]
+            if c < 0:
+                s_pos.append(slot)
+                self._side_free.append(slot)
+            else:
+                cl.append(c)
+                sl.append(slot)
+                self._free[c].append(slot)
+        if cl:
+            self._apply_delete(cl, sl)
+        if s_pos:
+            self.side = self.side._replace(
+                valid=self.side.valid.at[jnp.asarray(s_pos)].set(False))
+        return len(pids)
+
+    def compact(self) -> int:
+        """Fold side-buffer points into freed slots of their owning cluster.
+        Returns how many points moved; points whose cluster is still full
+        stay in the buffer. Search results are unchanged (same scoring)."""
+        side_valid = np.asarray(self.side.valid)
+        side_cluster = np.asarray(self.side.cluster)
+        side_ids = np.asarray(self.side.ids)
+        cl, sl, pos_l = [], [], []
+        for pos in np.where(side_valid)[0]:
+            c = int(side_cluster[pos])
+            if self._free[c]:
+                slot = self._free[c].pop()
+                cl.append(c)
+                sl.append(slot)
+                pos_l.append(int(pos))
+                self._loc[int(side_ids[pos])] = (c, slot)
+                self._side_free.append(int(pos))
+        if not pos_l:
+            return 0
+        pos_j = jnp.asarray(pos_l)
+        self._apply_insert(cl, sl, side_ids[pos_l].astype(np.int32),
+                           self.side.codes[pos_j])
+        self.side = self.side._replace(
+            valid=self.side.valid.at[pos_j].set(False))
+        return len(pos_l)
+
+
+class MutableJunoIndex(MutableIndexBase):
+    """Online-mutable wrapper over a built :class:`JunoIndexData`.
+
+    ``insert`` encodes new points with the EXISTING codebooks (no
+    retraining) and appends them into free padded slots of their owning
+    cluster; when a cluster's padding is exhausted the point spills into a
+    fixed-capacity :class:`SideBuffer`. ``delete`` tombstones points via the
+    ``valid`` mask. Neither touches the search hot path's shapes, so all
+    jitted search signatures stay warm. ``compact()`` folds side-buffer
+    points back into cluster slots freed by deletes — a search no-op by
+    construction (side points are scored with the identical gather an
+    in-cluster point gets).
+    """
+
+    def __init__(self, data: JunoIndexData, *, side_capacity: int = 256):
+        self.data = data
+        self._init_bookkeeping(data.ivf.valid, data.ivf.point_ids,
+                               side_capacity=side_capacity,
+                               first_new_id=int(data.codes.shape[0]),
+                               n_subspaces=int(data.codes.shape[1]))
+
+    def _labels_codes(self, pts):
+        return _label_encode(pts, self.data.ivf.centroids, self.data.codebook)
+
+    def _apply_insert(self, cl, sl, ids, codes):
+        cl_j, sl_j = jnp.asarray(cl), jnp.asarray(sl)
+        ivf = self.data.ivf._replace(
+            point_ids=self.data.ivf.point_ids.at[cl_j, sl_j].set(
+                jnp.asarray(ids)),
+            valid=self.data.ivf.valid.at[cl_j, sl_j].set(True))
+        self.data = self.data._replace(
+            ivf=ivf,
+            cluster_codes=self.data.cluster_codes.at[cl_j, sl_j].set(codes))
+
+    def _apply_delete(self, cl, sl):
+        ivf = self.data.ivf._replace(
+            valid=self.data.ivf.valid.at[jnp.asarray(cl),
+                                         jnp.asarray(sl)].set(False))
+        self.data = self.data._replace(ivf=ivf)
+
+    # ---- query -----------------------------------------------------------
+    def search(self, queries, **kw):
+        """Side-buffer-aware :func:`search` over the current index state.
+        An empty side buffer is elided so the no-spill hot path compiles and
+        runs exactly as the immutable index's."""
+        side = self.side if self.side_fill else None
+        return search(self.data, queries, side=side, **kw)

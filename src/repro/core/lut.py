@@ -58,10 +58,21 @@ def masked_lut(lut: jnp.ndarray, mask: jnp.ndarray, tau: jnp.ndarray,
     if metric == "l2":
         fill = (tau * tau)[..., None]
         return jnp.where(mask, lut, fill)
-    else:  # ip: pruned entries contribute the worst plausible similarity
-        fill = jnp.min(jnp.where(mask, lut, jnp.inf), axis=-1, keepdims=True)
-        fill = jnp.where(jnp.isfinite(fill), fill, 0.0)
-        return jnp.where(mask, lut, fill)
+    return ip_pruned_fill(lut, mask)
+
+
+def ip_pruned_fill(lut: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """IP-metric pruned-entry substitution: each pruned entry contributes the
+    worst KEPT similarity of its row (0.0 when a row keeps nothing).
+
+    This is THE definition of ip pruning semantics — also applied by
+    ``kernels.ops.build_selective_lut`` (post-pass over the kernel's
+    placeholder) and mirrored by ``kernels.ref.selective_lut_ref``, so the
+    ref/pallas/core paths cannot silently diverge again
+    (tests/test_impl_parity.py)."""
+    fill = jnp.min(jnp.where(mask, lut, jnp.inf), axis=-1, keepdims=True)
+    fill = jnp.where(jnp.isfinite(fill), fill, 0.0)
+    return jnp.where(mask, lut, fill)
 
 
 def hit_tables(lut: jnp.ndarray, mask: jnp.ndarray, tau: jnp.ndarray,

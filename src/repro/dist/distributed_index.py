@@ -17,12 +17,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.density import DensityModel
 from repro.core.ivf import IVFIndex
-from repro.core.juno import (JunoIndexData, _search_batch,
+from repro.core.juno import (JunoIndexData, MutableIndexBase, SideBuffer,
+                             _label_encode, _search_batch,
                              _search_batch_two_stage)
 from repro.core.pq import PQCodebook
 
@@ -62,15 +64,30 @@ def shard_index(idx: JunoIndexData, mesh: Mesh) -> JunoIndexData:
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), idx, specs)
 
 
+def side_pspecs() -> SideBuffer:
+    """SideBuffer-shaped tree of PartitionSpecs: fully replicated (the buffer
+    is tiny; every shard scores the slice owned by its probed clusters)."""
+    return SideBuffer(codes=P(None, None), cluster=P(None), ids=P(None),
+                      valid=P(None))
+
+
 def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
                             mode: str = "H", metric: str = "l2",
                             thres_scale: float = 1.0, impl: str = "ref",
-                            rerank: int = 0):
-    """Build ``dsearch(sharded_index, queries) -> (scores, ids)``.
+                            rerank: int = 0, with_side: bool = False):
+    """Build ``dsearch(sharded_index, queries[, side]) -> (scores, ids)``.
 
     ``local_nprobe`` is the probe budget PER SHARD (global work scales with
     the mesh, matching the paper's fixed per-chip scan cost). The returned
     callable is jitted, so ``dsearch.lower(...)`` works for the dry-run.
+
+    With ``with_side=True`` the callable takes a replicated
+    :class:`SideBuffer` of online-insert overflow as a third argument: each
+    shard localizes the buffer's GLOBAL owning-cluster ids into its own
+    cluster range (ids owned by other shards localize out of [0, C_local)
+    and can never match a probed local cluster), so every side point is
+    scored by exactly the shard that owns its cluster — the same routing
+    rule inserts follow.
     """
     axes = tuple(mesh.axis_names)
     gather_axes = axes if len(axes) > 1 else axes[0]
@@ -79,15 +96,22 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     # better for l2); hit-count modes report counts (higher is better).
     higher_better = metric == "ip" if mode in ("H", "H2") else True
 
-    def local_search(idx: JunoIndexData, queries: jnp.ndarray):
+    def local_search(idx: JunoIndexData, queries: jnp.ndarray,
+                     side: SideBuffer | None = None):
+        if side is not None:
+            n_local = idx.ivf.centroids.shape[0]
+            lin = jnp.int32(0)
+            for ax in axes:
+                lin = lin * mesh.shape[ax] + jax.lax.axis_index(ax)
+            side = side._replace(cluster=side.cluster - lin * n_local)
         if mode == "H2":
             s, ids = _search_batch_two_stage(
                 idx, queries, nprobe=local_nprobe, k=k, metric=metric,
-                thres_scale=thres_scale, rerank=rerank, impl=impl)
+                thres_scale=thres_scale, rerank=rerank, impl=impl, side=side)
         else:
             s, ids = _search_batch(
                 idx, queries, nprobe=local_nprobe, k=k, mode=mode,
-                metric=metric, thres_scale=thres_scale, impl=impl)
+                metric=metric, thres_scale=thres_scale, impl=impl, side=side)
         nq = queries.shape[0]
         key = s if higher_better else -s
         keys = jax.lax.all_gather(key, gather_axes)       # (shards, Q, k)
@@ -99,8 +123,97 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
         out_scores = sel_key if higher_better else -sel_key
         return out_scores, out_ids
 
-    fn = shard_map(local_search, mesh=mesh,
-                   in_specs=(specs, P(None, None)),
+    in_specs = (specs, P(None, None))
+    if with_side:
+        in_specs = in_specs + (side_pspecs(),)
+    fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
                    out_specs=(P(None, None), P(None, None)),
                    check_rep=False)
     return jax.jit(fn)
+
+
+def make_distributed_insert(mesh: Mesh):
+    """Jitted ``apply(idx, clusters, slots, ids, codes) -> idx`` scatter.
+
+    The scatter targets rows of the cluster-sharded arrays, so XLA routes
+    each update to the shard that owns the cluster — inserts are "routed by
+    owning cluster" with no resharding and no shape change (hot jitted
+    search signatures stay warm). Output shardings are pinned to the input
+    layout.
+    """
+    specs = index_pspecs(mesh)
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def apply(idx: JunoIndexData, clusters, slots, ids, codes):
+        ivf = idx.ivf._replace(
+            point_ids=idx.ivf.point_ids.at[clusters, slots].set(ids),
+            valid=idx.ivf.valid.at[clusters, slots].set(True))
+        return idx._replace(
+            ivf=ivf,
+            cluster_codes=idx.cluster_codes.at[clusters, slots].set(codes))
+
+    return jax.jit(apply, out_shardings=out_sh)
+
+
+def make_distributed_delete(mesh: Mesh):
+    """Jitted ``apply(idx, clusters, slots) -> idx`` tombstone scatter."""
+    specs = index_pspecs(mesh)
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def apply(idx: JunoIndexData, clusters, slots):
+        ivf = idx.ivf._replace(
+            valid=idx.ivf.valid.at[clusters, slots].set(False))
+        return idx._replace(ivf=ivf)
+
+    return jax.jit(apply, out_shardings=out_sh)
+
+
+class DistributedMutableIndex(MutableIndexBase):
+    """Sharded, online-mutable JUNO index (the serving-scale counterpart of
+    :class:`repro.core.MutableJunoIndex`).
+
+    Data plane: cluster-sharded :class:`JunoIndexData` + replicated
+    :class:`SideBuffer`; searches go through ``make_distributed_search(...,
+    with_side=True)`` which merges per-shard top-k exactly. Control plane:
+    the host-side slot bookkeeping inherited from
+    :class:`~repro.core.juno.MutableIndexBase`, with device updates applied
+    by the routed scatter updaters above — each insert/delete lands on the
+    shard owning its cluster, and ``compact()`` (also inherited) folds the
+    replicated side buffer back through the same routed scatter.
+    """
+
+    def __init__(self, idx: JunoIndexData, mesh: Mesh, *,
+                 side_capacity: int = 256):
+        n_clusters = idx.ivf.point_ids.shape[0]
+        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        assert n_clusters % n_shards == 0, \
+            f"clusters ({n_clusters}) must divide evenly over {n_shards} shards"
+        self.mesh = mesh
+        self.data = shard_index(idx, mesh)
+        self._insert_fn = make_distributed_insert(mesh)
+        self._delete_fn = make_distributed_delete(mesh)
+        # replicated small arrays for insert-time encoding
+        self._centroids = idx.ivf.centroids
+        self._codebook = idx.codebook
+        self._init_bookkeeping(idx.ivf.valid, idx.ivf.point_ids,
+                               side_capacity=side_capacity,
+                               first_new_id=int(idx.codes.shape[0]),
+                               n_subspaces=int(idx.codes.shape[1]))
+
+    def _labels_codes(self, pts):
+        return _label_encode(pts, self._centroids, self._codebook)
+
+    def _apply_insert(self, cl, sl, ids, codes):
+        self.data = self._insert_fn(self.data, jnp.asarray(cl),
+                                    jnp.asarray(sl), jnp.asarray(ids), codes)
+
+    def _apply_delete(self, cl, sl):
+        self.data = self._delete_fn(self.data, jnp.asarray(cl),
+                                    jnp.asarray(sl))
+
+    def searcher(self, local_nprobe: int, k: int, **kw):
+        """Side-aware distributed search callable for this index's mesh."""
+        return make_distributed_search(self.mesh, local_nprobe, k,
+                                       with_side=True, **kw)

@@ -57,6 +57,14 @@ def build_selective_lut(qsub: jnp.ndarray, entries: jnp.ndarray,
     e = entries.shape[1]
     lut = lut[:b].reshape(*lead, s, e)
     hit = hit[:b].reshape(*lead, s, e)
+    if metric == "ip":
+        # The kernel substitutes pruned entries with -tau^2/2 (the exact
+        # floor needs a row reduction over kept entries, which would cost a
+        # second kernel pass). Recover the reference semantics here with one
+        # cheap vectorized pass so impl="pallas" and impl="ref" rank
+        # identically.
+        from repro.core.lut import ip_pruned_fill
+        lut = ip_pruned_fill(lut, hit >= 0)
     return lut, hit
 
 

@@ -22,7 +22,9 @@ def selective_lut_ref(q0, q1, e0, e1, esq, tau, *, metric="l2"):
         t = esq[None] - 2.0 * dot
         outer = t <= tau_sq
         inner = t <= 0.25 * tau_sq
-        lut = jnp.where(outer, dot, -0.5 * tau_sq)
+        # shared pruned-entry substitution rule (core/lut.ip_pruned_fill)
+        from repro.core.lut import ip_pruned_fill
+        lut = ip_pruned_fill(dot, outer)
     hit = inner.astype(jnp.int8) - (~outer).astype(jnp.int8)
     return lut.astype(jnp.float32), hit
 

@@ -66,11 +66,11 @@ def _kernel_ip(q0_ref, q1_ref, e0_ref, e1_ref, esq_ref, tau_ref,
     tau_sq = (tau * tau)[:, :, None]
     outer = t <= tau_sq
     inner = t <= 0.25 * tau_sq
-    # pruned entries contribute the worst kept similarity's floor: we cannot
-    # compute the row-min of kept entries per (b, s) without a second pass,
-    # so the kernel substitutes -tau^2/2 (≤ any kept value's bound; exact
-    # floor applied in ops.py costs an extra pass and changed nothing in
-    # recall tests).
+    # pruned entries get a -tau^2/2 placeholder: the row-min of kept entries
+    # (the reference substitution) needs a reduction over the whole E axis,
+    # which this tiled kernel cannot do in one pass. ops.build_selective_lut
+    # replaces the placeholder with the exact kept-row min afterwards so the
+    # pallas and ref paths rank identically (tests/test_impl_parity.py).
     lut_ref[...] = jnp.where(outer, dot, -0.5 * tau_sq)
     hit_ref[...] = (inner.astype(jnp.int8) - (~outer).astype(jnp.int8))
 

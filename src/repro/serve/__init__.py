@@ -1,1 +1,2 @@
+from .ann import AnnRequest, AnnServeEngine  # noqa: F401
 from .engine import Request, ServeEngine  # noqa: F401

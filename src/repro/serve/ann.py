@@ -1,0 +1,208 @@
+"""Online ANN query serving (`repro.serve.ann`).
+
+Mirrors the fixed-slot design of the LM ``ServeEngine``: requests enter an
+async queue and every engine tick drains ONE group of compatible requests
+into a single jitted search call. Three mechanisms keep the number of
+compiled programs small and the batches dense:
+
+* **Knob quantization** — per-request (k, mode, nprobe) are resolved to a
+  small lattice of static jit signatures (``K_BUCKETS × modes ×
+  NPROBE_BUCKETS``), so arbitrary client knobs never trigger fresh traces
+  on the hot path.
+* **Size-bucketed dynamic batching** — queued requests with the same
+  resolved signature are coalesced into one batch, padded up to the next
+  bucket in ``BATCH_BUCKETS`` (pad rows replicate the last real query, so
+  they are in-distribution work whose results are sliced off).
+* **Recall-target routing** — ``mode="auto"`` requests are routed to
+  L/M/H2/H by the declared ``recall_target``, exposing the paper's
+  quality/throughput dial as a per-request SLA knob.
+
+The engine owns a :class:`repro.core.MutableJunoIndex`: ``insert``/
+``delete``/``compact`` are served between ticks with no rebuild and no
+change to any jitted search signature (the side buffer rides along as a
+fixed-shape argument).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.juno import (JunoIndexData, MutableJunoIndex, _search_batch,
+                             _search_batch_two_stage)
+
+
+@dataclasses.dataclass
+class AnnRequest:
+    rid: int
+    queries: np.ndarray                 # (q, D) f32
+    k: int = 10
+    mode: str = "auto"                  # "H" | "M" | "L" | "H2" | "auto"
+    nprobe: int = 0                     # 0 → engine default for the mode
+    recall_target: float = 0.9          # router input when mode == "auto"
+    # filled in by the engine
+    scores: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class AnnServeEngine:
+    """Dynamic-batching ANN serving engine over a mutable JUNO index."""
+
+    K_BUCKETS = (10, 100)
+    NPROBE_BUCKETS = (4, 8, 16, 32)
+    BATCH_BUCKETS = (8, 32, 128)
+    MODE_NPROBE = {"L": 8, "M": 8, "H2": 16, "H": 16}
+    # recall_target lower bound → mode, checked in order (router table)
+    ROUTES = ((0.9, "H"), (0.8, "H2"), (0.5, "M"), (0.0, "L"))
+
+    def __init__(self, index: JunoIndexData | MutableJunoIndex, *,
+                 metric: str = "l2", impl: str = "ref",
+                 thres_scale: float = 1.0, side_capacity: int = 256,
+                 batch_buckets: tuple[int, ...] | None = None):
+        self.index = (index if isinstance(index, MutableJunoIndex)
+                      else MutableJunoIndex(index,
+                                            side_capacity=side_capacity))
+        self.metric = metric
+        self.impl = impl
+        self.thres_scale = thres_scale
+        # deployment-tunable: big buckets fill a TPU's batch dim; smaller
+        # buckets suit CPU where per-query cost grows with batch size
+        self.batch_buckets = tuple(batch_buckets or self.BATCH_BUCKETS)
+        self.queue: collections.deque[AnnRequest] = collections.deque()
+        self.completed: list[AnnRequest] = []
+        self._rid = 0
+        self.stats = {"queries": 0, "requests": 0, "ticks": 0,
+                      "padded_rows": 0, "inserts": 0, "deletes": 0,
+                      "signatures": collections.Counter()}
+
+    # ---- request plane ---------------------------------------------------
+    def submit(self, queries, *, k: int = 10, mode: str = "auto",
+               nprobe: int = 0, recall_target: float = 0.9) -> AnnRequest:
+        req = AnnRequest(rid=self._rid, queries=np.atleast_2d(
+            np.asarray(queries, np.float32)), k=k, mode=mode, nprobe=nprobe,
+            recall_target=recall_target, t_submit=time.perf_counter())
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    def route(self, req: AnnRequest) -> tuple[int, str, int]:
+        """Resolve per-request knobs to one static jit signature."""
+        mode = req.mode
+        if mode == "auto":
+            mode = next(m for lo, m in self.ROUTES if req.recall_target >= lo)
+        k = next((b for b in self.K_BUCKETS if b >= req.k), None) or req.k
+        nprobe = req.nprobe or self.MODE_NPROBE[mode]
+        nprobe = next((b for b in self.NPROBE_BUCKETS if b >= nprobe),
+                      self.NPROBE_BUCKETS[-1])
+        nprobe = min(nprobe, self.index.data.ivf.centroids.shape[0])
+        return k, mode, nprobe
+
+    # ---- engine ticks ----------------------------------------------------
+    def step(self) -> int:
+        """Serve one signature group in one jitted call. Returns #queries."""
+        if not self.queue:
+            return 0
+        sig = self.route(self.queue[0])
+        max_rows = self.batch_buckets[-1]
+        # one linear pass: pick head-signature requests FIFO until the batch
+        # budget closes; everything else keeps its order for later ticks
+        picked, rest, rows, closed = [], [], 0, False
+        for req in self.queue:
+            if closed or self.route(req) != sig:
+                rest.append(req)
+                continue
+            if picked and rows + req.queries.shape[0] > max_rows:
+                closed = True     # preserve FIFO within the signature
+                rest.append(req)
+                continue
+            picked.append(req)
+            rows += req.queries.shape[0]
+        self.queue = collections.deque(rest)
+
+        k, mode, nprobe = sig
+        batch = np.concatenate([r.queries for r in picked], axis=0)
+        # an empty side buffer contributes nothing: drop the argument so the
+        # jitted program skips side scoring entirely (side=None and side≠None
+        # are separate traces; crossing over costs one compile, not a rebuild)
+        side = self.index.side if self.index.side_fill else None
+        # a single request larger than the top bucket is served in top-bucket
+        # chunks, so the jit-signature lattice stays closed for any request
+        out_s, out_i = [], []
+        for lo in range(0, rows, max_rows):
+            chunk = batch[lo:lo + max_rows]
+            n = chunk.shape[0]
+            bucket = next(b for b in self.batch_buckets if b >= n)
+            if n < bucket:  # in-distribution pad rows (see module docstring)
+                chunk = np.pad(chunk, ((0, bucket - n), (0, 0)), mode="edge")
+            s, ids = self._dispatch(jnp.asarray(chunk), k, mode, nprobe, side)
+            out_s.append(np.asarray(s)[:n])
+            out_i.append(np.asarray(ids)[:n])
+            self.stats["padded_rows"] += bucket - n
+            self.stats["signatures"][(k, mode, nprobe, bucket)] += 1
+        s, ids = np.concatenate(out_s), np.concatenate(out_i)
+
+        off, now = 0, time.perf_counter()
+        for req in picked:
+            q = req.queries.shape[0]
+            req.scores = s[off:off + q, :req.k]
+            req.ids = ids[off:off + q, :req.k]
+            req.done, req.t_done = True, now
+            off += q
+            self.completed.append(req)
+        self.stats["queries"] += rows
+        self.stats["requests"] += len(picked)
+        self.stats["ticks"] += 1
+        return rows
+
+    def _dispatch(self, qb, k, mode, nprobe, side):
+        if mode == "H2":
+            return _search_batch_two_stage(
+                self.index.data, qb, nprobe=nprobe, k=k, metric=self.metric,
+                thres_scale=self.thres_scale, impl=self.impl, side=side)
+        return _search_batch(
+            self.index.data, qb, nprobe=nprobe, k=k, mode=mode,
+            metric=self.metric, thres_scale=self.thres_scale,
+            impl=self.impl, side=side)
+
+    def run(self, max_ticks: int = 100_000) -> int:
+        """Drain the queue; returns total queries served."""
+        total = 0
+        for _ in range(max_ticks):
+            if not self.queue:
+                break
+            total += self.step()
+        return total
+
+    # ---- mutation plane (control path, between ticks) --------------------
+    def insert(self, points) -> list[int]:
+        ids = self.index.insert(points)
+        self.stats["inserts"] += len(ids)
+        return ids
+
+    def delete(self, ids) -> int:
+        n = self.index.delete(ids)
+        self.stats["deletes"] += n
+        return n
+
+    def compact(self) -> int:
+        return self.index.compact()
+
+    # ---- observability ---------------------------------------------------
+    def latency_stats(self) -> dict:
+        lats = sorted(r.latency for r in self.completed)
+        if not lats:
+            return {"n": 0}
+        pick = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))]  # noqa: E731
+        return {"n": len(lats), "p50": pick(0.5), "p95": pick(0.95),
+                "max": lats[-1]}

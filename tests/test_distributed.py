@@ -234,3 +234,54 @@ print("OK", r_dist, r_single)
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_mutable_side_buffer_multi_device_subprocess():
+    """Real 8-way mutable sharded index: side-buffer cluster localization
+    (`lin * C_local` offset per shard) must route every spilled point to
+    exactly the shard owning its cluster — results bit-equal to the
+    single-device MutableJunoIndex. A 1-device mesh cannot cover this (the
+    offset is identically zero there)."""
+    code = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.core import JunoConfig, MutableJunoIndex, build
+from repro.data import make_dataset, DEEP_LIKE
+from repro.dist.distributed_index import DistributedMutableIndex
+
+pts, q = make_dataset(DEEP_LIKE, 8000, 32, key=jax.random.PRNGKey(3))
+cfg = JunoConfig(n_clusters=32, n_entries=32, calib_queries=16,
+                 kmeans_iters=4, capacity_mult=1.1)
+idx = build(pts, cfg)
+mesh = jax.make_mesh((8,), ("data",))
+dmi = DistributedMutableIndex(idx, mesh, side_capacity=64)
+mid = MutableJunoIndex(idx, side_capacity=64)
+
+# overfill the tightest cluster so at least 4 inserts spill to the side
+c = int(np.argmin([dmi.free_slots(cc) for cc in range(32)]))
+cent = np.asarray(idx.ivf.centroids[c])
+rng = np.random.default_rng(1)
+newpts = (cent[None] + 0.01 * rng.standard_normal(
+    (dmi.free_slots(c) + 4, cent.shape[0]))).astype(np.float32)
+ids_d, ids_s = dmi.insert(newpts), mid.insert(newpts)
+assert ids_d == ids_s and dmi.side_fill == mid.side_fill >= 4
+dmi.delete(ids_d[:2]); mid.delete(ids_s[:2])
+
+dsearch = dmi.searcher(local_nprobe=4, k=10, mode="H")   # 4x8 = all clusters
+s_d, i_d = dsearch(dmi.data, q[:16], dmi.side)
+s_s, i_s = mid.search(q[:16], nprobe=32, k=10, mode="H", batch=16)
+np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+# spilled points must be found through the sharded path specifically
+qs = newpts[2:]
+_, got = dsearch(dmi.data, jax.numpy.asarray(qs), dmi.side)
+assert all(ids_d[2 + j] in np.asarray(got)[j] for j in range(len(qs)))
+print("OK")
+'''
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=".",
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

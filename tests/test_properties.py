@@ -117,3 +117,90 @@ def test_hit_table_antisymmetry_bounds(s_dim, seed):
     m = np.asarray(mask)
     assert np.all((t == -1) == ~m)
     assert np.all((t == 1) <= m)
+
+
+# ---------------------------------------------------------------------------
+# Online mutability invariants (MutableJunoIndex)
+# ---------------------------------------------------------------------------
+import functools  # noqa: E402
+
+from repro.core import JunoConfig, MutableJunoIndex, build  # noqa: E402
+from repro.data import DEEP_LIKE, make_dataset  # noqa: E402
+
+
+@functools.lru_cache(maxsize=1)
+def _mutable_base():
+    """One shared base index (hypothesis-wrapped tests can't take fixtures)."""
+    pts, q = make_dataset(DEEP_LIKE, 2500, 8, key=jax.random.PRNGKey(21))
+    cfg = JunoConfig(n_clusters=16, n_entries=16, calib_queries=12,
+                     kmeans_iters=4, capacity_mult=1.05)
+    return np.asarray(pts), np.asarray(q), build(pts, cfg)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_insert_then_search_finds_point(seed):
+    """A freshly inserted point must be retrievable by its own vector."""
+    pts, _, idx = _mutable_base()
+    mid = MutableJunoIndex(idx, side_capacity=32)
+    rng = np.random.default_rng(seed)
+    base = pts[rng.integers(0, len(pts))]
+    newpt = (base + 0.05 * rng.standard_normal(pts.shape[1])
+             ).astype(np.float32)
+    (pid,) = mid.insert(newpt[None])
+    _, ids = mid.search(newpt[None], nprobe=16, k=10, mode="H")
+    assert pid in np.asarray(ids)[0], (seed, pid)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["H", "M", "H2"]))
+def test_delete_then_search_never_returns_id(seed, mode):
+    """A tombstoned id must never appear again, in any scan mode."""
+    pts, _, idx = _mutable_base()
+    mid = MutableJunoIndex(idx)
+    rng = np.random.default_rng(seed)
+    pid = int(rng.integers(0, len(pts)))
+    mid.delete([pid])
+    _, ids = mid.search(pts[pid][None], nprobe=16, k=20, mode=mode)
+    assert pid not in np.asarray(ids)[0], (seed, mode, pid)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["H", "M", "L"]))
+def test_compact_is_search_noop(seed, mode):
+    """compact() folds side-buffer points into freed cluster slots without
+    changing any search result: the top-k is bit-identical up to the only
+    freedom lax.top_k has — its index-order tie-break among EXACTLY equal
+    scores (a moved point changes flat position, so equal-score runs may
+    permute; e.g. two inserts that quantize to the same PQ codes tie
+    bit-for-bit). Asserted: score vectors bit-identical, and the id set at
+    every non-boundary score level identical."""
+    pts, q, idx = _mutable_base()
+    mid = MutableJunoIndex(idx, side_capacity=64)
+    rng = np.random.default_rng(seed)
+    free = [mid.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 2, cent.shape[0]))).astype(np.float32)
+    mid.insert(newpts)
+    assert mid.side_fill >= 2, "spill expected: tightest cluster overfilled"
+    # tombstone two ORIGINAL members of that cluster → compact targets open up
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:2]
+    mid.delete(victims)
+
+    qq = np.concatenate([q, newpts[:2]], axis=0)
+    s0, i0 = (np.asarray(x)
+              for x in mid.search(qq, nprobe=8, k=20, mode=mode))
+    moved = mid.compact()
+    assert moved >= 2, "deletes freed slots, compact must use them"
+    s1, i1 = (np.asarray(x)
+              for x in mid.search(qq, nprobe=8, k=20, mode=mode))
+    np.testing.assert_array_equal(s0, s1)
+    for r in range(len(qq)):
+        boundary = s0[r, -1]   # rank-k score: membership there is tie-broken
+        for v in np.unique(s0[r][s0[r] != boundary]):
+            assert (set(i0[r][s0[r] == v]) == set(i1[r][s1[r] == v])), \
+                (seed, mode, r, float(v))

@@ -1,0 +1,147 @@
+"""AnnServeEngine: batching/routing correctness + mutability end-to-end.
+
+The engine's contract: whatever batching, padding, coalescing, and knob
+quantization happen inside, every request's rows are bit-equal to a direct
+``search()`` call with the resolved signature (rows of ``_search_batch`` are
+independent, so batch composition must not leak between requests).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import JunoConfig, MutableJunoIndex, build, search
+from repro.data import DEEP_LIKE, make_dataset
+from repro.serve.ann import AnnServeEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    pts, q = make_dataset(DEEP_LIKE, 3000, 40, key=jax.random.PRNGKey(17))
+    cfg = JunoConfig(n_clusters=16, n_entries=32, calib_queries=16,
+                     kmeans_iters=4, capacity_mult=1.1)
+    return np.asarray(pts), np.asarray(q), build(pts, cfg)
+
+
+def test_engine_matches_direct_search(served):
+    _, q, idx = served
+    eng = AnnServeEngine(idx)
+    reqs = [eng.submit(q[:5], k=10, mode="H", nprobe=8),
+            eng.submit(q[5:9], k=10, mode="M", nprobe=8),
+            eng.submit(q[9:10], k=50, mode="H2"),
+            eng.submit(q[10:20], k=10, mode="L", nprobe=4)]
+    assert eng.run() == 20
+    for req in reqs:
+        k, mode, nprobe = eng.route(req)
+        s, ids = search(idx, req.queries, nprobe=nprobe, k=k, mode=mode,
+                        batch=req.queries.shape[0])
+        np.testing.assert_array_equal(np.asarray(ids)[:, :req.k], req.ids)
+        np.testing.assert_array_equal(np.asarray(s)[:, :req.k], req.scores)
+
+
+def test_engine_coalesces_same_signature(served):
+    _, q, idx = served
+    eng = AnnServeEngine(idx)
+    for i in range(6):   # 6 requests, one signature → one tick
+        eng.submit(q[i * 2:(i + 1) * 2], k=10, mode="H", nprobe=8)
+    eng.run()
+    assert eng.stats["ticks"] == 1
+    assert eng.stats["requests"] == 6
+    ((sig, count),) = eng.stats["signatures"].items()
+    assert sig == (10, "H", 8, 32) and count == 1  # 12 rows → bucket 32
+
+
+def test_router_recall_targets(served):
+    _, q, idx = served
+    eng = AnnServeEngine(idx)
+    for target, want in [(0.99, "H"), (0.9, "H"), (0.85, "H2"),
+                         (0.6, "M"), (0.2, "L")]:
+        req = eng.submit(q[:1], recall_target=target)
+        assert eng.route(req)[1] == want, (target, want)
+    eng.queue.clear()
+
+
+def test_knob_quantization(served):
+    _, q, idx = served
+    eng = AnnServeEngine(idx)
+    req = eng.submit(q[:3], k=7, mode="H", nprobe=5)
+    k, mode, nprobe = eng.route(req)
+    assert (k, nprobe) == (10, 8)       # buckets, not raw knobs
+    eng.run()
+    assert req.ids.shape == (3, 7)      # sliced back to the requested k
+
+
+def test_engine_insert_delete_visible(served):
+    pts, q, idx = served
+    eng = AnnServeEngine(idx)
+    rng = np.random.default_rng(2)
+    newpts = (q[:4] + 0.03 * rng.standard_normal(q[:4].shape)
+              ).astype(np.float32)
+    ids = eng.insert(newpts)
+    req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert all(ids[j] in req.ids[j] for j in range(4))
+
+    eng.delete(ids[:2])
+    req2 = eng.submit(newpts[:2], k=10, mode="H", nprobe=16)
+    eng.run()
+    assert all(ids[j] not in req2.ids[j] for j in range(2))
+
+
+def test_engine_spill_and_compact(served):
+    """Overfill the tightest cluster through the engine: spilled points must
+    be served from the side buffer, and compact() must fold them back."""
+    pts, q, idx = served
+    eng = AnnServeEngine(idx, side_capacity=32)
+    mid = eng.index
+    free = [mid.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    rng = np.random.default_rng(4)
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 3, cent.shape[0]))).astype(np.float32)
+    ids = eng.insert(newpts)
+    assert mid.side_fill >= 3
+    req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert all(ids[j] in req.ids[j] for j in range(len(ids)))
+
+    # free slots, fold back, still retrievable (now from cluster storage)
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:3]
+    eng.delete(victims)
+    assert eng.compact() >= 3
+    assert mid.side_fill == 0
+    req2 = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert all(ids[j] in req2.ids[j] for j in range(len(ids)))
+
+
+def test_distributed_mutable_matches_single_device(served):
+    """On a 1-device mesh the sharded mutable index must reproduce the
+    single-device MutableJunoIndex bit-for-bit (insert + delete + side)."""
+    from repro.dist.distributed_index import DistributedMutableIndex
+
+    pts, q, idx = served
+    mesh = jax.make_mesh((1,), ("data",))
+    dmi = DistributedMutableIndex(idx, mesh, side_capacity=32)
+    mid = MutableJunoIndex(idx, side_capacity=32)
+
+    free = [mid.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    rng = np.random.default_rng(9)
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 2, cent.shape[0]))).astype(np.float32)
+    ids_d = dmi.insert(newpts)
+    ids_s = mid.insert(newpts)
+    assert ids_d == ids_s and dmi.side_fill == mid.side_fill >= 2
+    dmi.delete(ids_d[:1])
+    mid.delete(ids_s[:1])
+
+    dsearch = dmi.searcher(local_nprobe=16, k=10, mode="H")
+    s_d, i_d = dsearch(dmi.data, q[:16], dmi.side)
+    s_s, i_s = mid.search(q[:16], nprobe=16, k=10, mode="H",
+                          batch=16)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
