@@ -31,19 +31,22 @@ def run(dataset="deep"):
 
     points = []
     for nprobe in [4, 8, 16]:
-        # baseline: IVFPQ with full LUT (threshold → ∞ disables selection)
-        for name, mode, scale in [
-                ("baseline", "H", 1e6),
-                ("JUNO-H", "H", 1.0),
-                ("JUNO-H2", "H2", 1.0),
-                ("JUNO-M", "M", 1.0),
-                ("JUNO-L", "L", 1.0),
-                ("JUNO-L-tight", "L", 0.5)]:
+        # baseline: IVFPQ with full LUT (threshold → ∞ disables selection);
+        # JUNO-H2-fused: the same two-stage operating point served by the
+        # fused hit-count→masked-ADC scan (identical ids to JUNO-H2)
+        for name, mode, scale, fused in [
+                ("baseline", "H", 1e6, False),
+                ("JUNO-H", "H", 1.0, False),
+                ("JUNO-H2", "H2", 1.0, False),
+                ("JUNO-H2-fused", "H2", 1.0, True),
+                ("JUNO-M", "M", 1.0, False),
+                ("JUNO-L", "L", 1.0, False),
+                ("JUNO-L-tight", "L", 0.5, False)]:
             m = "H" if name == "baseline" else mode
 
             def fn():
                 return search(index, queries, nprobe=nprobe, k=100, mode=m,
-                              metric=metric, thres_scale=scale)
+                              metric=metric, thres_scale=scale, fused=fused)
 
             t = time_fn(fn, iters=3)
             _, ids = fn()
@@ -57,6 +60,13 @@ def run(dataset="deep"):
                  f"qps={qps:.0f};R1@100={r1:.3f};R100@1000={r100:.3f};"
                  f"f32_ops/q={f32_ops};int8_ops/q={i8_ops}")
             points.append((name, nprobe, qps, r1))
+
+        # fused-vs-unfused speedup at this probe budget (same ids by
+        # construction, so this isolates the kernel-path cost)
+        by_name = {n: q for (n, np_, q, _) in points if np_ == nprobe}
+        emit(f"fig12_{dataset}_fused_speedup_np{nprobe}", 0.0,
+             f"fused_over_composed="
+             f"{by_name['JUNO-H2-fused'] / by_name['JUNO-H2']:.2f}x")
 
     # Pareto summary: best QPS at each recall band (the paper's grey line)
     for lo, hi, tag in [(0.0, 0.95, "lowQ"), (0.95, 0.97, "midQ"),

@@ -8,11 +8,19 @@ batching, query-only. The engine must win on throughput (dynamic batching
 amortizes dispatch and fills the batch dimension) while also absorbing the
 inserts; ``--check``/``--smoke`` turn that into a hard gate.
 
-    PYTHONPATH=src python benchmarks/serve_qps.py [--smoke]
+A second section compares FUSED vs UNFUSED serving of the high-recall
+tiers: the same H2-tier (and H+H2-tier) request trace served by an engine
+with ``fused=True`` — both stages of the two-stage search in one fused
+scan, H folded onto the H2 signature — against a default engine. Gated
+(fused H2-tier QPS >= unfused) under ``--check``/``--smoke``; ``--json``
+records the numbers (committed as BENCH_fused.json).
+
+    PYTHONPATH=src python benchmarks/serve_qps.py [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -149,7 +157,58 @@ def run(dataset: str = "deep", n_requests: int = 96, insert_every: int = 12,
                 f"ticks={engine.stats['ticks']};"
                 f"signatures={len(engine.stats['signatures'])};"
                 f"padded_rows={engine.stats['padded_rows']}")
-    return {"base_qps": base_qps, "eng_qps": eng_qps, "lat": lat}
+    fused = run_fused_tiers(index, queries, cfg)
+    return {"base_qps": base_qps, "eng_qps": eng_qps, "lat": lat,
+            "fused": fused}
+
+
+# high-recall request mix: (n_queries, k, recall_target); >= 0.9 routes to
+# the H tier, [0.8, 0.9) to H2 — exactly the tiers a fused engine serves
+# through the fused two-stage kernel path
+HIGH_RECALL_MIX = [(4, 10, 0.95), (2, 10, 0.85), (1, 10, 0.92),
+                   (4, 10, 0.85), (8, 10, 0.88), (2, 10, 0.97)]
+
+
+def run_fused_tiers(index, queries: np.ndarray, cfg,
+                    n_requests: int = 48) -> dict:
+    """Fused vs unfused serving of the high-recall tiers (query-only).
+
+    Two traces: the H2 tier alone (the acceptance gate: fused must be at
+    least as fast), and the combined H+H2 tier (where the fused engine
+    additionally coalesces both tiers onto one jit signature)."""
+    out = {}
+    for tag, lo, hi in [("h2_tier", 0.8, 0.9), ("h_h2_tier", 0.8, 1.1)]:
+        mix = [m for m in HIGH_RECALL_MIX if lo <= m[2] < hi]
+        trace, pos = [], 0
+        for r in range(n_requests):
+            nq, k, target = mix[r % len(mix)]
+            rows = np.take(queries, range(pos, pos + nq), axis=0, mode="wrap")
+            trace.append((rows, k, target))
+            pos += nq
+        total_q = sum(t[0].shape[0] for t in trace)
+
+        qps = {}
+        for name, fused in [("unfused", False), ("fused", True)]:
+            eng = AnnServeEngine(index, metric=cfg.metric, fused=fused,
+                                 batch_buckets=(8, 16, 32))
+            for _ in range(2):  # warm every signature+bucket, then time
+                for (q, k, t) in trace:
+                    eng.submit(q, k=k, recall_target=t)
+                eng.run()
+            t0 = time.perf_counter()
+            for (q, k, t) in trace:
+                eng.submit(q, k=k, recall_target=t)
+            eng.run()
+            dt = time.perf_counter() - t0
+            qps[name] = total_q / dt
+        speedup = qps["fused"] / qps["unfused"]
+        common.emit(f"serve_qps.{tag}", 0.0,
+                    f"fused_qps={qps['fused']:.0f};"
+                    f"unfused_qps={qps['unfused']:.0f};"
+                    f"speedup={speedup:.2f}x")
+        out[tag] = {"fused_qps": qps["fused"], "unfused_qps": qps["unfused"],
+                    "speedup": speedup}
+    return out
 
 
 def main() -> int:
@@ -161,6 +220,8 @@ def main() -> int:
                     help="tiny-N CI mode; implies --check")
     ap.add_argument("--check", action="store_true",
                     help="exit 1 unless engine QPS >= single-shot QPS")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write fused-vs-unfused + engine QPS numbers here")
     args = ap.parse_args()
     if args.smoke:
         common.set_smoke_sizes()
@@ -170,7 +231,21 @@ def main() -> int:
     print(f"# engine {res['eng_qps']:.0f} QPS vs single-shot "
           f"{res['base_qps']:.0f} QPS -> {'OK' if ok else 'REGRESSION'}",
           file=sys.stderr)
-    if (args.check or args.smoke) and not ok:
+    f = res["fused"]["h2_tier"]
+    fused_ok = f["fused_qps"] >= f["unfused_qps"]
+    print(f"# H2 tier fused {f['fused_qps']:.0f} QPS vs unfused "
+          f"{f['unfused_qps']:.0f} QPS -> "
+          f"{'OK' if fused_ok else 'REGRESSION'}", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"dataset": args.dataset, "smoke": args.smoke,
+                       "backend": "cpu-hostpath",
+                       "engine_vs_single_shot": {
+                           "engine_qps": res["eng_qps"],
+                           "single_shot_qps": res["base_qps"]},
+                       **res["fused"]}, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    if (args.check or args.smoke) and not (ok and fused_ok):
         return 1
     return 0
 

@@ -50,6 +50,18 @@ def serve_online(index, points, queries, gt):
     print(f"inserted 4 (found {hits}/4), deleted 2, "
           f"side buffer fill: {engine.index.side_fill}")
 
+    # fused two-stage serving: H and H2 tiers coalesce onto one signature
+    feng = AnnServeEngine(index, batch_buckets=(8, 16, 32), fused=True)
+    freqs = [feng.submit(queries[i * 4:(i + 1) * 4], k=10,
+                         recall_target=[0.95, 0.85][i % 2])
+             for i in range(8)]
+    feng.run()
+    fr1 = np.mean([float(recall_1_at_k(r.ids, gt[i * 4:(i + 1) * 4, 0]))
+                   for i, r in enumerate(freqs)])
+    print(f"fused engine: H+H2 tiers in {feng.stats['ticks']} tick(s) "
+          f"({len(feng.stats['signatures'])} signature), "
+          f"mean R1@10 = {fr1:.3f}")
+
 
 def serve_distributed_mutable(index, queries, mesh):
     """Sharded mutable serving: inserts routed to the owning shard."""

@@ -282,17 +282,27 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric", "impl",
-                                             "rerank"))
+                                             "rerank", "fused"))
 def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
                             nprobe: int, k: int, metric: str,
                             thres_scale: float, rerank: int = 0,
-                            impl: str = "ref",
+                            impl: str = "ref", fused: bool = False,
                             side: SideBuffer | None = None):
     """Mode "H2": int8 hit-count prefilter → exact ADC on top-C survivors.
 
     Beyond-paper: converts JUNO's dynamic skip into a static-shape candidate
     set so the expensive f32 gather/accumulate runs on C = rerank points
-    instead of nprobe·P (see module docstring)."""
+    instead of nprobe·P (see module docstring).
+
+    ``fused=True`` routes both stages through
+    ``kernels.ops.fused_two_stage_scan`` — one kernel computes the hit
+    counts, applies the survivor threshold in-kernel and emits the compacted
+    top-C candidates WITH their masked-ADC distances, so this function does
+    no wide top-k and no separate rerank gather. Candidate selection is the
+    same top-C-by-count rule, so fused and composed return identical ids
+    (tests/test_impl_parity.py). Orthogonal to ``impl``, which picks who
+    builds the LUT/hit tables.
+    """
     q = queries.astype(jnp.float32)
     nq = q.shape[0]
     m = index.codebook.sub_dim
@@ -313,12 +323,11 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
     valid = index.ivf.valid[cids]
     ids = index.ivf.point_ids[cids]
 
+    from repro.kernels import ops as kops
     if impl == "pallas":
-        from repro.kernels import ops as kops
         mlut, table = kops.build_selective_lut(
             qsub, index.codebook.entries, index.codebook.entry_sq, tau,
             metric=metric)
-        counts = kops.hit_count_scan(table, codes, valid)
     else:
         lut, mask = lut_lib.build_lut(qsub, index.codebook, tau,
                                       metric=metric)
@@ -329,24 +338,38 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
         else:
             table = lut_lib.hit_tables_ip(lut, index.codebook.entry_sq, tau,
                                           mode="reward_penalty")
-        counts = jax.vmap(jax.vmap(scan_lib.hit_count_scan))(table, codes,
-                                                             valid)
 
-    # stage 1: top-C candidates by hit count (int32, cheap)
     p = codes.shape[2]
-    flat_counts = counts.reshape(nq, -1)
-    _, cand = jax.lax.top_k(flat_counts, min(c_budget, nprobe * p))
-    cand_probe = cand // p                                       # (Q, C)
+    cap = min(c_budget, nprobe * p)
+    if fused:
+        # both stages in one fused scan: counts, in-kernel survivor
+        # threshold, compacted top-C candidates + their ADC totals
+        _, _, cand, exact = kops.fused_two_stage_scan(
+            mlut, table, codes, valid, cap_c=cap, metric=metric)
+        cand_probe = cand // p                                   # (Q, C)
+        cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
+        cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
+    else:
+        if impl == "pallas":
+            counts = kops.hit_count_scan(table, codes, valid)
+        else:
+            counts = jax.vmap(jax.vmap(scan_lib.hit_count_scan))(table, codes,
+                                                                 valid)
 
-    # stage 2: exact ADC only on survivors
-    cand_codes = jnp.take_along_axis(
-        codes.reshape(nq, -1, codes.shape[-1]), cand[..., None], axis=1)
-    s_idx = jnp.arange(mlut.shape[2])[None, None, :]
-    vals = mlut[jnp.arange(nq)[:, None, None], cand_probe[..., None],
-                s_idx, cand_codes.astype(jnp.int32)]             # (Q, C, S)
-    exact = jnp.sum(vals, axis=-1)
-    cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
-    cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
+        # stage 1: top-C candidates by hit count (int32, cheap)
+        flat_counts = counts.reshape(nq, -1)
+        _, cand = jax.lax.top_k(flat_counts, cap)
+        cand_probe = cand // p                                   # (Q, C)
+
+        # stage 2: exact ADC only on survivors
+        cand_codes = jnp.take_along_axis(
+            codes.reshape(nq, -1, codes.shape[-1]), cand[..., None], axis=1)
+        s_idx = jnp.arange(mlut.shape[2])[None, None, :]
+        vals = mlut[jnp.arange(nq)[:, None, None], cand_probe[..., None],
+                    s_idx, cand_codes.astype(jnp.int32)]         # (Q, C, S)
+        exact = jnp.sum(vals, axis=-1)
+        cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
+        cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
     if metric == "ip":
         exact = exact + jnp.take_along_axis(probe_base, cand_probe, axis=1)
     if side is not None:
@@ -377,8 +400,15 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
 def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
            k: int = 100, mode: str = "H", metric: str = "l2",
            thres_scale: float = 1.0, batch: int = 64, impl: str = "ref",
-           rerank: int = 0, side: SideBuffer | None = None):
-    """Public search API — chunks queries through the jitted batch kernel."""
+           rerank: int = 0, fused: bool = False,
+           side: SideBuffer | None = None):
+    """Public search API — chunks queries through the jitted batch kernel.
+
+    ``fused=True`` (mode "H2" only) serves the two-stage search through the
+    fused hit-count→masked-ADC kernel path; results carry identical top-k
+    ids to the composed path (see ``_search_batch_two_stage``)."""
+    if fused and mode != "H2":
+        raise ValueError(f"fused=True requires mode='H2', got mode={mode!r}")
     nq = queries.shape[0]
     out_s, out_i = [], []
     for i in range(0, nq, batch):
@@ -393,7 +423,8 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
         if mode == "H2":
             s, ids = _search_batch_two_stage(
                 index, qb, nprobe=nprobe, k=k, metric=metric,
-                thres_scale=thres_scale, rerank=rerank, impl=impl, side=side)
+                thres_scale=thres_scale, rerank=rerank, impl=impl,
+                fused=fused, side=side)
         else:
             s, ids = _search_batch(index, qb, nprobe=nprobe, k=k, mode=mode,
                                    metric=metric, thres_scale=thres_scale,

@@ -74,12 +74,18 @@ def side_pspecs() -> SideBuffer:
 def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
                             mode: str = "H", metric: str = "l2",
                             thres_scale: float = 1.0, impl: str = "ref",
-                            rerank: int = 0, with_side: bool = False):
+                            rerank: int = 0, fused: bool = False,
+                            with_side: bool = False):
     """Build ``dsearch(sharded_index, queries[, side]) -> (scores, ids)``.
 
     ``local_nprobe`` is the probe budget PER SHARD (global work scales with
     the mesh, matching the paper's fixed per-chip scan cost). The returned
     callable is jitted, so ``dsearch.lower(...)`` works for the dry-run.
+
+    ``fused=True`` (mode "H2" only) runs each shard's two-stage scan
+    through the fused hit-count→masked-ADC kernel path — per-shard results,
+    and therefore the exact global merge, are id-identical to the composed
+    path (core/juno.py).
 
     With ``with_side=True`` the callable takes a replicated
     :class:`SideBuffer` of online-insert overflow as a third argument: each
@@ -89,6 +95,8 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     scored by exactly the shard that owns its cluster — the same routing
     rule inserts follow.
     """
+    if fused and mode != "H2":
+        raise ValueError(f"fused=True requires mode='H2', got mode={mode!r}")
     axes = tuple(mesh.axis_names)
     gather_axes = axes if len(axes) > 1 else axes[0]
     specs = index_pspecs(mesh)
@@ -107,7 +115,8 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
         if mode == "H2":
             s, ids = _search_batch_two_stage(
                 idx, queries, nprobe=local_nprobe, k=k, metric=metric,
-                thres_scale=thres_scale, rerank=rerank, impl=impl, side=side)
+                thres_scale=thres_scale, rerank=rerank, impl=impl,
+                fused=fused, side=side)
         else:
             s, ids = _search_batch(
                 idx, queries, nprobe=local_nprobe, k=k, mode=mode,

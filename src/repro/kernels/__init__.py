@@ -7,6 +7,9 @@
     hit_count     — int8 reward/penalty scan (aggressive approximation)
     ivf_filter    — fused stage-A filtering distances (the cuBLAS
                     x^2-2xq^T+q^2 trick, §5.3, MXU-native)
+    fused_two_stage — hit-count prefilter + in-kernel survivor threshold +
+                    masked ADC + top-candidate compaction in ONE kernel
+                    (the RT→TC pipelining of §5.5, DESIGN.md §3)
 
 ``ops`` holds the jit'd public wrappers (interpret=True off-TPU);
 ``ref`` holds the pure-jnp oracles every kernel is tested against.

@@ -1,0 +1,296 @@
+"""Pallas TPU kernel: fused two-stage scan — int8 hit-count prefilter and
+survivor-masked ADC in ONE kernel (paper §5.5; DESIGN.md §3).
+
+The paper's core hardware claim is that the RT-core membership test and the
+tensor-core distance accumulation run as a *pipeline*, not two serialized
+passes with a host-visible survivor set in between. The TPU analogue built
+here: a query-batched grid keeps each (query-block, point-block) tile in one
+VMEM residency and runs BOTH stages over it —
+
+  phase 0 (grid t=0) — int8 hit scores for the tile plus a streamed
+      per-query top-``cap_c`` (value, flat-index) carried in VMEM scratch:
+      after the last point block, scratch row q holds exactly
+      ``lax.top_k(counts[q], cap_c)`` (ties resolved index-ascending, like
+      ``lax.top_k``), i.e. the stage-1 survivor threshold θ_q = the cap_c-th
+      largest hit count — computed in-kernel, never leaving the chip.
+  phase 1 (grid t=1) — the masked-LUT ADC for the same tiles, but only
+      where ``count >= θ_q``: blocks with zero survivors skip the f32
+      contraction entirely (`pl.when`), surviving lanes are accumulated with
+      the same SLAB one-hot MXU contraction as ``pq_scan``, and the
+      compacted candidate list is folded: each block writes its slice of
+      the (cap_c,) candidate distances.
+
+Outputs (Q = queries, W = nprobe·P points, C = cap_c):
+  counts (Q, np, P) int32 — stage-1 scores (== ``hit_count`` composed)
+  dist   (Q, np, P) f32  — ADC totals at survivors, ``bad_value`` elsewhere
+  cand   (Q, C)     int32 — flat top-C-by-count indices into (np·P),
+                            bit-identical to ``lax.top_k(counts, C)[1]``
+  cand_dist (Q, C)  f32  — ``dist`` gathered at ``cand``
+
+so the downstream two-stage search needs NO wide top-k and NO second scan:
+stage 2 consumes the compacted candidates directly.
+
+Grid: (Q/bQ, 2, np·Ppad/bP) with bP the largest divisor of P ≤ 128 when
+that divisor is a usable tile (≥ 64), else P is padded per probe to a
+multiple of 128 (a P like 8·prime would otherwise collapse bP to 8 and
+balloon the grid). Padded slots carry a count sentinel STRICTLY below the
+invalid-point `_NEG`, so — with cap_c clamped to the real candidate count —
+they can never enter the top-C, and the real entries' (value desc, index
+asc) selection order is preserved exactly (the padded flat index is
+monotone in the unpadded one); the wrapper remaps candidate indices back
+to the unpadded layout. The query axis pads to bQ and is sliced off.
+VMEM per program ≈
+bQ·S·E·(4+1) [lut+table] + bQ·bP·S [codes] + bQ·bP·SLAB·E·4 [one-hot slab]
++ 2·bQ·C·4 [top-C scratch] ≈ 2.6 MB at (bQ, bP, S, E, C) = (4, 128, 48,
+256, 400).
+
+``fused_two_stage_host`` is the schedule-equivalent host path used for
+off-TPU serving (see its docstring); the Pallas kernel itself is validated
+in interpret mode by tests/test_fused_kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ops import slab_onehot_dot
+
+DEFAULT_BQ = 4     # query rows per program
+DEFAULT_BP = 128   # points per program (upper bound; must divide P)
+SLAB = 8           # subspaces one-hot-expanded at a time (VMEM control)
+
+_NEG = -(2 ** 30)  # invalid-point count sentinel (matches hit_count kernel)
+# point-padding sentinel: STRICTLY below _NEG so a padded slot loses every
+# tie against a real (even invalid) point and never enters the top-C
+_PAD = -(2 ** 30) - 1
+# scratch init must sit STRICTLY below every real/pad count or top_k's
+# position-asc tie-break would keep a stale scratch slot in place of a
+# genuine sentinel-count point
+_INIT = -(2 ** 31)
+
+
+def _fused_kernel(lut_ref, table_ref, codes_ref, valid_ref,
+                  counts_ref, dist_ref, cand_ref, cdist_ref,
+                  topv_ref, topi_ref, *, n_entries, cap_c, bp, p_real,
+                  p_pad, bad_value):
+    t = pl.program_id(1)           # 0 = hit-count pass, 1 = masked-ADC pass
+    j = pl.program_id(2)           # flat point-block index over np·Ppad
+    codes = codes_ref[...].astype(jnp.int32)          # (bQ, bP, S)
+    valid = valid_ref[...]                            # (bQ, bP)
+    bq = codes.shape[0]
+
+    # stage 1 (both phases — phase 1 re-derives the survivor mask from it):
+    # batched SLAB one-hot contraction; f32 accumulation of {-1,0,1} terms
+    # is exact (|count| <= S << 2^24), so counts are bit-identical to the
+    # int32-path hit_count kernel.
+    table = table_ref[...][:, 0].astype(jnp.float32)  # (bQ, S, E)
+    cnt = slab_onehot_dot(codes, table, n_entries=n_entries,
+                          out_dtype=jnp.float32, slab=SLAB)
+    bad_count = _NEG
+    if p_pad != p_real:            # point axis padded: mark pad slots so
+        lane = j * bp + jax.lax.broadcasted_iota(jnp.int32, (bq, bp), 1)
+        bad_count = jnp.where(lane % p_pad < p_real, _NEG, _PAD)
+    counts = jnp.where(valid, cnt.astype(jnp.int32), bad_count)
+    counts_ref[...] = counts
+
+    @pl.when(t == 0)
+    def _stage1():
+        @pl.when(j == 0)
+        def _init():
+            topv_ref[...] = jnp.full_like(topv_ref, _INIT)
+            topi_ref[...] = jnp.zeros_like(topi_ref)
+        # streamed top-C merge: previously selected entries sit at the lower
+        # concat positions, so lax.top_k's position-ascending tie-break
+        # reproduces the global (value desc, index asc) order exactly.
+        newi = j * bp + jax.lax.broadcasted_iota(jnp.int32, (bq, bp), 1)
+        runv = jnp.concatenate([topv_ref[...], counts], axis=1)
+        runi = jnp.concatenate([topi_ref[...], newi], axis=1)
+        v, pos = jax.lax.top_k(runv, cap_c)
+        topv_ref[...] = v
+        topi_ref[...] = jnp.take_along_axis(runi, pos, axis=1)
+        cand_ref[...] = topi_ref[...]
+        cdist_ref[...] = jnp.full_like(cdist_ref, bad_value)
+        dist_ref[...] = jnp.full((bq, codes.shape[1]), bad_value, jnp.float32)
+
+    @pl.when(t == 1)
+    def _stage2():
+        theta = topv_ref[...][:, cap_c - 1]           # (bQ,) survivor floor
+        keep = valid & (counts >= theta[:, None])
+        cand_ref[...] = topi_ref[...]
+        any_keep = jnp.any(keep)
+
+        @pl.when(any_keep)
+        def _adc():
+            lut = lut_ref[...][:, 0]                  # (bQ, S, E) f32
+            acc = slab_onehot_dot(codes, lut, n_entries=n_entries,
+                                  out_dtype=jnp.float32, slab=SLAB)
+            dist = jnp.where(keep, acc, bad_value)
+            dist_ref[...] = dist
+            # compaction fold: this block's slice of the candidate list
+            local = topi_ref[...] - j * bp            # (bQ, C)
+            inblk = (local >= 0) & (local < bp)
+            got = jnp.take_along_axis(dist, jnp.clip(local, 0, bp - 1),
+                                      axis=1)
+            cdist_ref[...] = jnp.where(inblk, got, cdist_ref[...])
+
+        # zero-survivor block: stage-2 f32 work skipped entirely
+        @pl.when(jnp.logical_not(any_keep))
+        def _skip():
+            dist_ref[...] = jnp.full((bq, codes.shape[1]), bad_value,
+                                     jnp.float32)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap_c", "metric", "bq", "bp",
+                                    "interpret"))
+def fused_two_stage(lut: jnp.ndarray, table: jnp.ndarray, codes: jnp.ndarray,
+                    valid: jnp.ndarray, *, cap_c: int, metric: str = "l2",
+                    bq: int = DEFAULT_BQ, bp: int | None = None,
+                    interpret: bool = False):
+    """lut (Q, np, S, E) f32, table (Q, np, S, E) int8,
+    codes (Q, np, P, S) uint8, valid (Q, np, P) bool →
+    (counts (Q, np, P) i32, dist (Q, np, P) f32,
+     cand (Q, C) i32, cand_dist (Q, C) f32). See module docstring."""
+    q, n_probe, p, s = codes.shape
+    e = lut.shape[-1]
+    cap_c = max(1, min(cap_c, n_probe * p))
+    bp = _largest_divisor(p, bp or DEFAULT_BP)
+    if bp < min(64, p):
+        # divisor cliff (e.g. P = 8·prime would give bp = 8): pad the point
+        # axis per probe to a full tile instead; pad slots are masked in the
+        # kernel with the below-_NEG _PAD sentinel, so candidate selection
+        # over the REAL entries is unchanged (cap_c <= np·P real entries
+        # always outrank every pad slot)
+        bp = DEFAULT_BP
+        pad_p = (-p) % bp
+        codes = jnp.pad(codes, ((0, 0), (0, 0), (0, pad_p), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, 0), (0, pad_p)))
+    p_pad = codes.shape[2]
+    w = n_probe * p_pad
+    bq = min(bq, q)
+    pad_q = (-q) % bq
+    if pad_q:
+        lut = jnp.pad(lut, ((0, pad_q), (0, 0), (0, 0), (0, 0)))
+        table = jnp.pad(table, ((0, pad_q), (0, 0), (0, 0), (0, 0)))
+        codes = jnp.pad(codes, ((0, pad_q), (0, 0), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad_q), (0, 0), (0, 0)))
+    qp = q + pad_q
+    codes_f = codes.reshape(qp, w, s)
+    valid_f = valid.reshape(qp, w)
+    npb = p_pad // bp                 # point blocks per probe
+    bad = float("inf") if metric == "l2" else float("-inf")
+
+    counts, dist, cand, cdist = pl.pallas_call(
+        functools.partial(_fused_kernel, n_entries=e, cap_c=cap_c, bp=bp,
+                          p_real=p, p_pad=p_pad, bad_value=bad),
+        grid=(qp // bq, 2, n_probe * npb),
+        in_specs=[
+            pl.BlockSpec((bq, 1, s, e), lambda i, t, j: (i, j // npb, 0, 0)),
+            pl.BlockSpec((bq, 1, s, e), lambda i, t, j: (i, j // npb, 0, 0)),
+            pl.BlockSpec((bq, bp, s), lambda i, t, j: (i, j, 0)),
+            pl.BlockSpec((bq, bp), lambda i, t, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, bp), lambda i, t, j: (i, j)),
+            pl.BlockSpec((bq, bp), lambda i, t, j: (i, j)),
+            pl.BlockSpec((bq, cap_c), lambda i, t, j: (i, 0)),
+            pl.BlockSpec((bq, cap_c), lambda i, t, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, w), jnp.int32),
+            jax.ShapeDtypeStruct((qp, w), jnp.float32),
+            jax.ShapeDtypeStruct((qp, cap_c), jnp.int32),
+            jax.ShapeDtypeStruct((qp, cap_c), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, cap_c), jnp.int32),
+                        pltpu.VMEM((bq, cap_c), jnp.int32)],
+        interpret=interpret,
+    )(lut, table, codes_f, valid_f)
+    counts = counts[:q].reshape(q, n_probe, p_pad)[:, :, :p]
+    dist = dist[:q].reshape(q, n_probe, p_pad)[:, :, :p]
+    cand, cdist = cand[:q], cdist[:q]
+    if p_pad != p:
+        # remap candidate indices from the padded to the real flat layout
+        # (cand never contains pad slots — see _PAD — and the mapping is
+        # monotone, so top-k order is preserved)
+        cand = (cand // p_pad) * p + cand % p_pad
+    return counts, dist, cand, cdist
+
+
+@functools.partial(jax.jit, static_argnames=("cap_c", "metric"))
+def fused_two_stage_host(lut: jnp.ndarray, table: jnp.ndarray,
+                         codes: jnp.ndarray, valid: jnp.ndarray, *,
+                         cap_c: int, metric: str = "l2"):
+    """Schedule-equivalent host path for off-TPU serving. Same contract as
+    the kernel with two documented deviations, both invisible to the
+    two-stage search (which consumes only ``cand``/``cand_dist``/``counts``):
+
+    * ``cand`` holds the identical top-C-by-count SET, but ordered by flat
+      index instead of ``lax.top_k``'s (value desc, index asc);
+    * ``dist`` carries ADC totals only at ``cand`` positions (``bad_value``
+      elsewhere) — count-ties beyond the C-th candidate are not scored.
+
+    The in-kernel streamed threshold becomes an exact θ-selection: a
+    values-only sort yields the per-query C-th-largest count θ_q, the
+    index-ascending rank among θ-ties falls out of one cumsum, and the
+    selected indices are compacted with searchsorted over that cumsum.
+    A key-value select (``lax.top_k`` / argsort) costs ~5× a values-only
+    sort on CPU at serving widths, and it is exactly the wide top-k that
+    dominates the composed two-stage path there — this is the host-side
+    payoff of the kernel's "threshold in-kernel, compact per block" design.
+    Stage 2 then gathers the masked LUT for exactly the C survivors.
+    """
+    q, n_probe, p, s = codes.shape
+    w = n_probe * p
+    cap_c = max(1, min(cap_c, w))
+    bad = jnp.float32(jnp.inf if metric == "l2" else -jnp.inf)
+    rows = jnp.arange(q)[:, None]
+
+    # ---- stage 1: hit counts by direct gather (CPU-optimal) -------------
+    qi = jnp.arange(q)[:, None, None, None]
+    pri = jnp.arange(n_probe)[None, :, None, None]
+    si = jnp.arange(s)[None, None, None, :]
+    ci = codes.astype(jnp.int32)
+    tvals = table[qi, pri, si, ci]                       # (Q, np, P, S) int8
+    counts = jnp.where(valid, jnp.sum(tvals.astype(jnp.int32), axis=-1),
+                       _NEG)
+    flat = counts.reshape(q, w)
+
+    # ---- survivor threshold: exact θ-selection, no key-value sort -------
+    srt = jnp.sort(flat, axis=1)                         # values only
+    theta = srt[:, w - cap_c]                # C-th largest count (with ties)
+    n_gt = w - jax.vmap(
+        lambda sr, th: jnp.searchsorted(sr, th, side="right"))(srt, theta)
+    tie = flat == theta[:, None]
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=1) - 1
+    take = (flat > theta[:, None]) | (
+        tie & (tie_rank < (cap_c - n_gt)[:, None]))      # exactly C True
+
+    # ---- compaction: the C selected flat indices, index-ascending -------
+    cum = jnp.cumsum(take.astype(jnp.int32), axis=1)
+    ranks = jnp.arange(1, cap_c + 1)
+    cand = jax.vmap(
+        lambda c: jnp.searchsorted(c, ranks))(cum).astype(jnp.int32)
+
+    # ---- stage 2: masked-LUT ADC for the C survivors only ---------------
+    cand_probe = cand // p
+    cand_codes = jnp.take_along_axis(
+        codes.reshape(q, w, s), cand[..., None], axis=1).astype(jnp.int32)
+    s2 = jnp.arange(s)[None, None, :]
+    vals = lut[rows[..., None], cand_probe[..., None], s2, cand_codes]
+    cand_valid = jnp.take_along_axis(valid.reshape(q, w), cand, axis=1)
+    cdist = jnp.where(cand_valid, jnp.sum(vals, axis=-1), bad)
+
+    dist = jnp.full((q, w), bad, jnp.float32).at[rows, cand].set(cdist)
+    return counts, dist.reshape(q, n_probe, p), cand, cdist

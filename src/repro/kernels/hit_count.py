@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ops import slab_onehot_dot
+
 DEFAULT_BP = 128
 SLAB = 8
 
@@ -25,18 +27,8 @@ def _hit_kernel(table_ref, codes_ref, valid_ref, out_ref, *, n_sub,
                 n_entries):
     codes = codes_ref[...].astype(jnp.int32)          # (bP, S)
     table = table_ref[...].astype(jnp.int32)          # (S, E)
-    bp = codes.shape[0]
-
-    acc = jnp.zeros((bp,), jnp.int32)
-    for s0 in range(0, n_sub, SLAB):
-        sl = min(SLAB, n_sub - s0)
-        oh = jax.nn.one_hot(codes[:, s0:s0 + sl], n_entries,
-                            dtype=jnp.int32)          # (bP, sl, E)
-        acc = acc + jax.lax.dot_general(
-            oh.reshape(bp, sl * n_entries),
-            table[s0:s0 + sl, :].reshape(sl * n_entries, 1),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)[:, 0]
+    acc = slab_onehot_dot(codes, table, n_entries=n_entries,
+                          out_dtype=jnp.int32, slab=SLAB)
     out_ref[...] = jnp.where(valid_ref[...], acc, _NEG)
 
 

@@ -3,6 +3,9 @@
 On CPU (this container) kernels execute with ``interpret=True`` — the kernel
 body runs in Python over real blocks, validating BlockSpec tiling and
 semantics. On TPU they compile natively. ``use_pallas()`` picks the backend.
+
+Also home of :func:`slab_onehot_dot`, the SLAB-wise one-hot ``dot_general``
+shared by the kernel bodies (hit_count / pq_scan / fused_two_stage).
 """
 from __future__ import annotations
 
@@ -11,10 +14,55 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import hit_count as _hit
-from . import ivf_filter as _filt
-from . import pq_scan as _scan
-from . import selective_lut as _lut
+DEFAULT_SLAB = 8
+
+
+def slab_onehot_dot(codes: jnp.ndarray, tab: jnp.ndarray, *, n_entries: int,
+                    out_dtype=jnp.float32,
+                    slab: int = DEFAULT_SLAB) -> jnp.ndarray:
+    """``out[..., p] = sum_s tab[..., s, codes[..., p, s]]`` on the MXU.
+
+    codes (..., bP, S) int, tab (..., S, E) → (..., bP) in ``out_dtype``.
+
+    The per-(point, subspace) LUT gather is expressed as a one-hot
+    contraction — ``one_hot(codes_slab) (..., bP, sl·E) · tab_slab
+    (..., sl·E, 1)`` — the TPU analogue of the paper's Tensor-core
+    "A × B(=ones)" accumulation trick (§5.3): quantized codes choose MXU
+    operand rows instead of driving scalar lookups. The one-hot is formed
+    ``slab`` subspaces at a time to bound VMEM (≈ prod(lead)·bP·slab·E·
+    itemsize per slab). Accumulation dtype is pinned by ``out_dtype`` via
+    ``preferred_element_type``: int32 for the int8 hit path, f32 for the ADC
+    path (tests/test_kernels.py pins both).
+
+    Shared by the kernel bodies of ``hit_count`` (int32), ``pq_scan`` (f32)
+    and ``fused_two_stage`` (f32, batched) — callable both inside Pallas
+    kernels and as plain jnp.
+    """
+    n_sub = codes.shape[-1]
+    *lead, bp, _ = codes.shape
+    nb = len(lead)
+    dnums = (((nb + 1,), (nb,)), (tuple(range(nb)), tuple(range(nb))))
+    acc = jnp.zeros((*lead, bp), out_dtype)
+    for s0 in range(0, n_sub, slab):
+        sl = min(slab, n_sub - s0)
+        oh = jax.nn.one_hot(codes[..., s0:s0 + sl], n_entries,
+                            dtype=out_dtype)          # (..., bP, sl, E)
+        acc = acc + jax.lax.dot_general(
+            oh.reshape(*lead, bp, sl * n_entries),
+            tab[..., s0:s0 + sl, :].reshape(*lead, sl * n_entries, 1),
+            dnums, preferred_element_type=out_dtype)[..., 0]
+    return acc
+
+
+# NOTE: these imports sit BELOW slab_onehot_dot on purpose — the kernel
+# modules import it from here at module load, so it must already be bound
+# when a kernel module (imported by this block) re-enters the partially
+# initialised ``ops``.
+from . import fused_two_stage as _fused  # noqa: E402
+from . import hit_count as _hit  # noqa: E402
+from . import ivf_filter as _filt  # noqa: E402
+from . import pq_scan as _scan  # noqa: E402
+from . import selective_lut as _lut  # noqa: E402
 
 
 @functools.cache
@@ -92,6 +140,33 @@ def hit_count_scan(table: jnp.ndarray, codes: jnp.ndarray,
     for _ in lead:
         fn = jax.vmap(fn)
     return fn(table, codes, valid)
+
+
+def fused_two_stage_scan(mlut: jnp.ndarray, table: jnp.ndarray,
+                         codes: jnp.ndarray, valid: jnp.ndarray, *,
+                         cap_c: int, metric: str = "l2"):
+    """Fused two-stage scan: hit-count prefilter → in-kernel survivor
+    threshold → masked ADC + top-candidate compaction, in one pass.
+
+    mlut/table (Q, np, S, E), codes (Q, np, P, S), valid (Q, np, P) →
+    (counts (Q, np, P) i32, dist (Q, np, P) f32, cand (Q, C) i32,
+     cand_dist (Q, C) f32); ``cand`` is the top-cap_c-by-count candidate
+    set, ``cand_dist`` their masked-LUT totals — the two-stage search
+    consumes these directly, with no wide top-k and no second scan.
+
+    On TPU this is the fused Pallas kernel (one VMEM residency per tile,
+    RT→TC-pipeline analogue). Off-TPU it dispatches to the
+    schedule-equivalent host path rather than interpret mode: a 2-trip
+    grid under the interpreter would serialize the serving hot path, and
+    the host path's histogram selection is the same survivor-threshold
+    idea expressed CPU-natively. The interpret-mode kernel is validated
+    against the composed kernels by tests/test_fused_kernel.py.
+    """
+    if _on_tpu():
+        return _fused.fused_two_stage(mlut, table, codes, valid,
+                                      cap_c=cap_c, metric=metric)
+    return _fused.fused_two_stage_host(mlut, table, codes, valid,
+                                       cap_c=cap_c, metric=metric)
 
 
 def filter_scores(queries, centroids, centroid_sq, *, metric="l2"):

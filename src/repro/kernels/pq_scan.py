@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ops import slab_onehot_dot
+
 DEFAULT_BP = 128   # points per program
 SLAB = 8           # subspaces one-hot-expanded at a time (VMEM control)
 
@@ -29,21 +31,10 @@ def _scan_kernel(lut_ref, codes_ref, valid_ref, out_ref, *, n_sub, n_entries,
                  bad_value):
     codes = codes_ref[...].astype(jnp.int32)          # (bP, S)
     lut = lut_ref[...]                                # (S, E)
-    bp = codes.shape[0]
-
-    acc = jnp.zeros((bp,), jnp.float32)
     # slab over subspaces: one_hot (bP, SLAB, E) · lut_slab (SLAB, E) on MXU
-    for s0 in range(0, n_sub, SLAB):
-        sl = min(SLAB, n_sub - s0)
-        oh = jax.nn.one_hot(codes[:, s0:s0 + sl], n_entries,
-                            dtype=jnp.float32)        # (bP, sl, E)
-        acc = acc + jax.lax.dot_general(
-            oh.reshape(bp, sl * n_entries),
-            lut[s0:s0 + sl, :].reshape(sl * n_entries, 1),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)[:, 0]
-    valid = valid_ref[...]
-    out_ref[...] = jnp.where(valid, acc, bad_value)
+    acc = slab_onehot_dot(codes, lut, n_entries=n_entries,
+                          out_dtype=jnp.float32, slab=SLAB)
+    out_ref[...] = jnp.where(valid_ref[...], acc, bad_value)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "bp", "interpret"))

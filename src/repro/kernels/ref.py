@@ -5,6 +5,7 @@ shapes/dtypes and assert_allclose against these.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -44,6 +45,39 @@ def hit_count_ref(table, codes, valid):
     vals = table[s_idx, codes.astype(jnp.int32)].astype(jnp.int32)
     total = jnp.sum(vals, axis=-1)
     return jnp.where(valid, total, jnp.int32(-(2 ** 30)))
+
+
+def fused_two_stage_ref(lut, table, codes, valid, *, cap_c, metric="l2"):
+    """Dense oracle for the fused two-stage kernel (semantics of record).
+
+    lut/table (Q, np, S, E), codes (Q, np, P, S) uint8, valid (Q, np, P).
+    counts = per-point hit totals (== hit_count_ref per (q, probe));
+    θ_q = cap_c-th largest count of query q (over the flat np·P axis);
+    dist = ADC totals (== pq_scan_ref) wherever ``valid & (count >= θ_q)``,
+    bad_value elsewhere; cand = lax.top_k(counts_flat, cap_c)[1];
+    cand_dist = dist at cand.
+    """
+    q, n_probe, p, s = codes.shape
+    w = n_probe * p
+    cap_c = max(1, min(cap_c, w))
+    bad = jnp.float32(jnp.inf if metric == "l2" else -jnp.inf)
+    neg = jnp.int32(-(2 ** 30))
+
+    qi = jnp.arange(q)[:, None, None, None]
+    pri = jnp.arange(n_probe)[None, :, None, None]
+    si = jnp.arange(s)[None, None, None, :]
+    ci = codes.astype(jnp.int32)
+    counts = jnp.where(valid, jnp.sum(table[qi, pri, si, ci].astype(jnp.int32),
+                                      axis=-1), neg)
+    flat = counts.reshape(q, w)
+    topv, cand = jax.lax.top_k(flat, cap_c)
+    theta = topv[:, -1]
+
+    totals = jnp.sum(lut[qi, pri, si, ci].astype(jnp.float32), axis=-1)
+    keep = valid & (counts >= theta[:, None, None])
+    dist = jnp.where(keep, totals, bad)
+    cand_dist = jnp.take_along_axis(dist.reshape(q, w), cand, axis=1)
+    return counts, dist, cand, cand_dist
 
 
 def ivf_filter_ref(queries, centroids, centroid_sq, *, metric="l2"):

@@ -16,6 +16,10 @@ compiled programs small and the batches dense:
 * **Recall-target routing** — ``mode="auto"`` requests are routed to
   L/M/H2/H by the declared ``recall_target``, exposing the paper's
   quality/throughput dial as a per-request SLA knob.
+* **Fused two-stage serving** (``fused=True``) — the H and H2 recall
+  tiers fold onto one fused-H2 signature served by the fused
+  hit-count→masked-ADC scan (``kernels.ops.fused_two_stage_scan``),
+  coalescing both tiers' requests into shared batches; see ``__init__``.
 
 The engine owns a :class:`repro.core.MutableJunoIndex`: ``insert``/
 ``delete``/``compact`` are served between ticks with no rebuild and no
@@ -65,17 +69,33 @@ class AnnServeEngine:
     MODE_NPROBE = {"L": 8, "M": 8, "H2": 16, "H": 16}
     # recall_target lower bound → mode, checked in order (router table)
     ROUTES = ((0.9, "H"), (0.8, "H2"), (0.5, "M"), (0.0, "L"))
+    # fused serving: rerank budget C = FUSED_RERANK_MULT · k for the shared
+    # H/H2 fused signature — wide enough that the H tier keeps near-H recall
+    # (tests/test_recall_matrix.py pins the floors), small enough that
+    # stage 2 stays ≪ stage 1
+    FUSED_RERANK_MULT = 32
 
     def __init__(self, index: JunoIndexData | MutableJunoIndex, *,
                  metric: str = "l2", impl: str = "ref",
                  thres_scale: float = 1.0, side_capacity: int = 256,
-                 batch_buckets: tuple[int, ...] | None = None):
+                 batch_buckets: tuple[int, ...] | None = None,
+                 fused: bool = False):
         self.index = (index if isinstance(index, MutableJunoIndex)
                       else MutableJunoIndex(index,
                                             side_capacity=side_capacity))
         self.metric = metric
         self.impl = impl
         self.thres_scale = thres_scale
+        #: route the high-recall tiers (H and H2) through the fused
+        #: two-stage kernel path: both collapse onto ONE jit signature
+        #: (mode "H2", rerank = FUSED_RERANK_MULT·k), so their requests
+        #: coalesce into shared batches AND each call replaces the full
+        #: masked-ADC scan / wide top-k with the fused hit-count → in-kernel
+        #: threshold → compacted-rerank pipeline. H-tier results become
+        #: two-stage approximations (recall floors pinned in
+        #: tests/test_recall_matrix.py); H2-tier ids are unchanged only in
+        #: the candidate-budget sense (C grows from 4k to 32k).
+        self.fused = fused
         # deployment-tunable: big buckets fill a TPU's batch dim; smaller
         # buckets suit CPU where per-query cost grows with batch size
         self.batch_buckets = tuple(batch_buckets or self.BATCH_BUCKETS)
@@ -97,10 +117,15 @@ class AnnServeEngine:
         return req
 
     def route(self, req: AnnRequest) -> tuple[int, str, int]:
-        """Resolve per-request knobs to one static jit signature."""
+        """Resolve per-request knobs to one static jit signature.
+
+        With ``fused=True`` the H recall tier folds into the H2 signature
+        (see ``__init__``), so H and H2 requests batch together."""
         mode = req.mode
         if mode == "auto":
             mode = next(m for lo, m in self.ROUTES if req.recall_target >= lo)
+        if self.fused and mode == "H":
+            mode = "H2"
         k = next((b for b in self.K_BUCKETS if b >= req.k), None) or req.k
         nprobe = req.nprobe or self.MODE_NPROBE[mode]
         nprobe = next((b for b in self.NPROBE_BUCKETS if b >= nprobe),
@@ -169,7 +194,10 @@ class AnnServeEngine:
         if mode == "H2":
             return _search_batch_two_stage(
                 self.index.data, qb, nprobe=nprobe, k=k, metric=self.metric,
-                thres_scale=self.thres_scale, impl=self.impl, side=side)
+                thres_scale=self.thres_scale, impl=self.impl,
+                fused=self.fused,
+                rerank=self.FUSED_RERANK_MULT * k if self.fused else 0,
+                side=side)
         return _search_batch(
             self.index.data, qb, nprobe=nprobe, k=k, mode=mode,
             metric=self.metric, thres_scale=self.thres_scale,

@@ -16,3 +16,6 @@ if importlib.util.find_spec("hypothesis") is None:
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-device subprocess tests (minutes on CPU)")
+    config.addinivalue_line(
+        "markers", "interpret: interpret-mode Pallas kernel validation "
+        "(split into its own CI job)")

@@ -42,6 +42,25 @@ def test_distributed_1mesh_matches_single_all_modes(small_index, mode,
     np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_r), rtol=1e-6)
 
 
+def test_distributed_fused_matches_single(small_index):
+    """The fused two-stage path under shard_map: on a 1-device mesh it must
+    be identity with local ``search(..., fused=True)`` — and with the
+    composed distributed path (same candidate rule)."""
+    idx, q = small_index
+    mesh = jax.make_mesh((1,), ("data",))
+    sidx = shard_index(idx, mesh)
+    dfused = make_distributed_search(mesh, local_nprobe=4, k=10, mode="H2",
+                                     fused=True)
+    s_d, i_d = dfused(sidx, q)
+    s_r, i_r = search(idx, q, nprobe=4, k=10, mode="H2", fused=True)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_r),
+                               rtol=1e-6, atol=1e-6)
+    dcomp = make_distributed_search(mesh, local_nprobe=4, k=10, mode="H2")
+    _, i_c = dcomp(sidx, q)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_c))
+
+
 def test_index_pspecs_matches_index_structure(small_index):
     """Every array leaf of the index has exactly one PartitionSpec whose
     rank matches — guards the shard_map in_specs against index refactors."""

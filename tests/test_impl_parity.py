@@ -50,6 +50,44 @@ def test_ref_pallas_same_results(parity_data, metric, mode):
         np.testing.assert_allclose(s_ref, s_pal, rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_fused_two_stage_parity(parity_data, metric, impl):
+    """The fused H2 path must return IDENTICAL top-k ids to the composed
+    two-stage path (same top-C-by-count candidate rule, same exact-rerank
+    semantics), for both LUT implementations and both rerank budgets."""
+    _, q, idx = parity_data[metric]
+    for rerank in (0, 33):
+        kw = dict(nprobe=4, k=10, mode="H2", metric=metric,
+                  batch=q.shape[0], impl=impl, rerank=rerank)
+        s_c, i_c = (np.asarray(x) for x in search(idx, q, fused=False, **kw))
+        s_f, i_f = (np.asarray(x) for x in search(idx, q, fused=True, **kw))
+        np.testing.assert_array_equal(
+            i_c, i_f, err_msg=f"{metric}/{impl}/C={rerank}: ids diverge")
+        np.testing.assert_allclose(s_c, s_f, rtol=1e-5, atol=1e-4)
+
+
+def test_fused_parity_with_side_buffer(parity_data):
+    """Fused parity must survive online inserts: side-buffer points join
+    the rerank pool identically in both paths."""
+    pts, q, idx = parity_data["l2"]
+    mid = MutableJunoIndex(idx, side_capacity=16)
+    free = [mid.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    rng = np.random.default_rng(7)
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 3, cent.shape[0]))).astype(np.float32)
+    mid.insert(newpts)
+    assert mid.side_fill >= 3
+
+    kw = dict(nprobe=16, k=10, mode="H2", batch=q.shape[0])
+    s_c, i_c = (np.asarray(x) for x in mid.search(q, fused=False, **kw))
+    s_f, i_f = (np.asarray(x) for x in mid.search(q, fused=True, **kw))
+    np.testing.assert_array_equal(i_c, i_f)
+    np.testing.assert_allclose(s_c, s_f, rtol=1e-5, atol=1e-4)
+
+
 def test_ref_pallas_parity_with_side_buffer(parity_data):
     """Parity must survive online inserts: spilled side-buffer points are
     scored by shared code, but the per-probe tables they gather from come

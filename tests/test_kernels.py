@@ -11,6 +11,8 @@ from repro.kernels import ops, ref
 from repro.kernels.pq_scan import pq_scan
 from repro.kernels.hit_count import hit_count
 
+pytestmark = pytest.mark.interpret
+
 
 def _inputs(key, b, s, e, p, tau_scale=1.0):
     ks = jax.random.split(key, 6)
@@ -139,6 +141,45 @@ def test_selective_lut_mask_property(b, s, e, seed):
     assert bool(jnp.all(lut <= (tau * tau)[..., None] + 1e-5))
     # hit table values only in {-1, 0, 1}
     assert set(np.unique(np.asarray(hit))).issubset({-1, 0, 1})
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_slab_onehot_dot_dtypes(batched):
+    """Pin the MXU-path accumulation dtype of the shared SLAB one-hot
+    helper: int32 for the hit-count path, f32 for the ADC path — and exact
+    agreement with the plain-gather formulation in both."""
+    key = jax.random.PRNGKey(21)
+    s, e, p = 13, 32, 29                      # non-SLAB-multiple S
+    lead = (3,) if batched else ()
+    codes = jax.random.randint(key, (*lead, p, s), 0, e)
+    tab_i = jax.random.randint(jax.random.fold_in(key, 1), (*lead, s, e),
+                               -1, 2).astype(jnp.int8)
+    tab_f = jax.random.normal(jax.random.fold_in(key, 2), (*lead, s, e))
+
+    got_i = ops.slab_onehot_dot(codes, tab_i.astype(jnp.int32), n_entries=e,
+                                out_dtype=jnp.int32)
+    got_f = ops.slab_onehot_dot(codes, tab_f, n_entries=e,
+                                out_dtype=jnp.float32)
+    assert got_i.dtype == jnp.int32
+    assert got_f.dtype == jnp.float32
+
+    def gather_sum(tab):
+        vals = jnp.take_along_axis(tab[..., None, :, :], codes[..., None],
+                                   axis=-1)[..., 0]          # (..., P, S)
+        return jnp.sum(vals, axis=-1)
+
+    want_i = gather_sum(tab_i.astype(jnp.int32))
+    want_f = gather_sum(tab_f)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                               rtol=1e-5, atol=1e-5)
+
+    # f32 accumulation of small-int tables is still exact (the fused kernel
+    # relies on this to share one one-hot between both stages)
+    got_fi = ops.slab_onehot_dot(codes, tab_i.astype(jnp.float32),
+                                 n_entries=e, out_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got_fi).astype(np.int32),
+                                  np.asarray(want_i))
 
 
 @pytest.mark.parametrize("shape", [(64, 96, 128), (17, 40, 37),

@@ -12,11 +12,13 @@ Metric: recall of the exact top-10 within a k=100 candidate list (the
 paper's R@k style), plus strict recall@10-of-10 floors for the H modes.
 """
 import jax
+import numpy as np
 import pytest
 
 from repro.core import (JunoConfig, build, exact_topk, recall_n_at_k,
                         search)
 from repro.data import DEEP_LIKE, TTI_LIKE, make_dataset
+from repro.serve.ann import AnnServeEngine
 
 NPROBE = 16
 
@@ -33,6 +35,18 @@ FLOORS_10_AT_100 = {
 # l2 H2=0.469, ip H=0.642)
 FLOORS_10_AT_10 = {
     ("l2", "H"): 0.50, ("l2", "H2"): 0.30, ("ip", "H"): 0.45,
+}
+
+# fused-path floors at the two candidate budgets that exist in the system:
+# "H" = the serving engine's fused signature (rerank = FUSED_RERANK_MULT·k —
+# BOTH the H and H2 recall tiers are served at this budget), "H2" = the core
+# API's default fused budget (rerank=0 → 4k; what direct search(fused=True),
+# fig12 and the distributed path use).
+# Measured (2026-08, jax 0.4.37 CPU): l2: H=1.000 H2=0.923
+#                                     ip: H=0.965 H2=0.435
+FLOORS_FUSED_10_AT_100 = {
+    ("l2", "H"): 0.95, ("l2", "H2"): 0.80,
+    ("ip", "H"): 0.85, ("ip", "H2"): 0.30,
 }
 
 
@@ -69,6 +83,103 @@ def test_recall_floor_10_at_10(matrix_data, cell):
     floor = FLOORS_10_AT_10[cell]
     assert r >= floor, (
         f"recall@10 regression: {metric}/{mode} = {r:.3f} < {floor}")
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("tier", ["H", "H2"])
+def test_recall_floor_fused(matrix_data, metric, tier):
+    """Fused-path recall floors at both candidate budgets: "H" = the
+    engine's widened serving budget (32·k, serves the H and H2 recall
+    tiers), "H2" = the core default budget (4·k, identical candidates to
+    composed H2 — what direct fused search/fig12/dist use)."""
+    _, q, idx, gt10 = matrix_data[metric]
+    rerank = AnnServeEngine.FUSED_RERANK_MULT * 100 if tier == "H" else 0
+    _, ids = search(idx, q, nprobe=NPROBE, k=100, mode="H2", metric=metric,
+                    fused=True, rerank=rerank)
+    r = float(recall_n_at_k(ids, gt10))
+    floor = FLOORS_FUSED_10_AT_100[(metric, tier)]
+    assert r >= floor, (
+        f"fused recall@10-in-100 regression: {metric}/{tier} = {r:.3f} "
+        f"< {floor}")
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_unfused_bit_equal_to_seed_composition(matrix_data, metric):
+    """fused=False must remain BIT-IDENTICAL to the seed's composed
+    two-stage semantics. The expected result is rebuilt here from the
+    seed-era building blocks (reference LUT/hit-table construction, gather
+    scans, wide top-k) so a silent behaviour change in the default path —
+    not just a disagreement between fused and unfused — fails loudly."""
+    import jax.numpy as jnp
+
+    from repro.core import density as density_lib
+    from repro.core import lut as lut_lib
+    from repro.core import scan as scan_lib
+    from repro.core.ivf import filter_clusters
+
+    _, q, idx, _ = matrix_data[metric]
+    q = jnp.asarray(q)[:16]
+    nprobe, k = NPROBE, 10
+    got_s, got_i = search(idx, q, nprobe=nprobe, k=k, mode="H2",
+                          metric=metric, fused=False, batch=q.shape[0])
+
+    # seed-composed reference (mirrors the pre-fused _search_batch_two_stage
+    # op for op); jitted so both sides run compiled programs of the same
+    # structure — bit-equality is the whole point here
+    @jax.jit
+    def seed_two_stage(idx, q):
+        nq, m = q.shape[0], idx.codebook.sub_dim
+        base, cids = filter_clusters(q, idx.ivf, nprobe=nprobe,
+                                     metric=metric)
+        if metric == "l2":
+            res = q[:, None, :] - idx.ivf.centroids[cids]
+            qsub = res.reshape(nq, nprobe, -1, m)
+            probe_base = jnp.zeros((nq, nprobe), jnp.float32)
+        else:
+            qsub = jnp.broadcast_to(
+                q.reshape(nq, 1, -1, m), (nq, nprobe, q.shape[1] // m, m))
+            probe_base = base
+        tau = density_lib.predict_threshold(idx.density, qsub, 1.0)
+        codes = idx.cluster_codes[cids]
+        valid = idx.ivf.valid[cids]
+        ids = idx.ivf.point_ids[cids]
+        lut, mask = lut_lib.build_lut(qsub, idx.codebook, tau, metric=metric)
+        mlut = lut_lib.masked_lut(lut, mask, tau, metric=metric)
+        if metric == "l2":
+            table = lut_lib.hit_tables(lut, mask, tau, mode="reward_penalty",
+                                       metric="l2")
+        else:
+            table = lut_lib.hit_tables_ip(lut, idx.codebook.entry_sq, tau,
+                                          mode="reward_penalty")
+        counts = jax.vmap(jax.vmap(scan_lib.hit_count_scan))(table, codes,
+                                                             valid)
+        p = codes.shape[2]
+        _, cand = jax.lax.top_k(counts.reshape(nq, -1),
+                                min(4 * k, nprobe * p))
+        cand_probe = cand // p
+        cand_codes = jnp.take_along_axis(
+            codes.reshape(nq, -1, codes.shape[-1]), cand[..., None], axis=1)
+        s_idx = jnp.arange(mlut.shape[2])[None, None, :]
+        vals = mlut[jnp.arange(nq)[:, None, None], cand_probe[..., None],
+                    s_idx, cand_codes.astype(jnp.int32)]
+        exact = jnp.sum(vals, axis=-1)
+        cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
+        cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
+        if metric == "ip":
+            exact = exact + jnp.take_along_axis(probe_base, cand_probe,
+                                                axis=1)
+            exact = jnp.where(cand_valid, exact, -jnp.inf)
+            sel_s, sel = jax.lax.top_k(exact, k)
+            out_s = sel_s
+        else:
+            exact = jnp.where(cand_valid, exact, jnp.inf)
+            sel_s, sel = jax.lax.top_k(-exact, k)
+            out_s = -sel_s
+        return out_s, jnp.take_along_axis(cand_ids, sel, axis=1)
+
+    want_s, want_i = seed_two_stage(idx, q)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
 
 
 @pytest.mark.parametrize("metric", ["l2", "ip"])

@@ -50,6 +50,28 @@ def test_engine_coalesces_same_signature(served):
     assert sig == (10, "H", 8, 32) and count == 1  # 12 rows → bucket 32
 
 
+def test_fused_engine_routing_and_results(served):
+    """fused=True: the H recall tier folds onto the H2 signature (one
+    coalesced tick for a mixed H/H2 wave) and every request's rows stay
+    bit-equal to a direct fused search with the engine's rerank budget."""
+    _, q, idx = served
+    eng = AnnServeEngine(idx, fused=True)
+    r_h = eng.submit(q[:4], k=10, recall_target=0.95)    # H tier
+    r_h2 = eng.submit(q[4:9], k=10, recall_target=0.85)  # H2 tier
+    assert eng.route(r_h) == eng.route(r_h2) == (10, "H2", 16)
+    eng.run()
+    assert eng.stats["ticks"] == 1                       # coalesced
+    for req in (r_h, r_h2):
+        s, ids = search(idx, req.queries, nprobe=16, k=10, mode="H2",
+                        fused=True, rerank=eng.FUSED_RERANK_MULT * 10,
+                        batch=req.queries.shape[0])
+        np.testing.assert_array_equal(np.asarray(ids), req.ids)
+        np.testing.assert_array_equal(np.asarray(s), req.scores)
+    # explicit-mode requests outside the high-recall tiers are untouched
+    r_m = eng.submit(q[9:12], k=10, mode="M")
+    assert eng.route(r_m)[1] == "M"
+
+
 def test_router_recall_targets(served):
     _, q, idx = served
     eng = AnnServeEngine(idx)
