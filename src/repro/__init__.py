@@ -1,7 +1,9 @@
 """JUNO reproduction (sparsity-aware ANN search + RT-core mapping, on JAX).
 
 Subpackages: ``core`` (the paper's algorithm), ``kernels`` (Pallas),
+``rt`` (spatial prefilter: the RT-core stage at cluster granularity),
 ``models``/``train``/``serve`` (the surrounding LM system), ``dist``
 (sharding / distributed index / checkpointing / fault tolerance),
 ``launch`` (meshes + dry-run), ``configs``, ``data``.
+Documentation: docs/index.md.
 """

@@ -39,6 +39,8 @@ from .ref import exact_topk
 
 @dataclasses.dataclass(frozen=True)
 class JunoConfig:
+    """Build-time knobs of the JUNO index (paper defaults in comments)."""
+
     n_clusters: int = 1024          # C
     n_entries: int = 256            # E
     sub_dim: int = 2                # M (JUNO uses 2-D subspaces)
@@ -52,6 +54,8 @@ class JunoConfig:
 
 
 class JunoIndexData(NamedTuple):
+    """A built index: IVF + PQ codebooks + padded codes + density model."""
+
     ivf: IVFIndex
     codebook: PQCodebook
     codes: jnp.ndarray           # (N, S) uint8
@@ -77,10 +81,26 @@ class SideBuffer(NamedTuple):
 
     @property
     def capacity(self) -> int:
+        """Fixed slot count B of the buffer."""
         return self.ids.shape[0]
 
 
 def empty_side_buffer(capacity: int, n_subspaces: int) -> SideBuffer:
+    """Allocate an all-empty :class:`SideBuffer`.
+
+    Parameters
+    ----------
+    capacity : int
+        Fixed slot count B (part of the jitted search signature).
+    n_subspaces : int
+        PQ subspace count S of the index the buffer will ride along with.
+
+    Returns
+    -------
+    SideBuffer
+        codes (B, S) uint8 zeros, cluster/ids (B,) int32 = -1,
+        valid (B,) bool = False.
+    """
     return SideBuffer(
         codes=jnp.zeros((capacity, n_subspaces), jnp.uint8),
         cluster=jnp.full((capacity,), -1, jnp.int32),
@@ -181,17 +201,43 @@ def _calibrate_density(pts, residuals, codebook, codes, ivf, config, key):
                                  degree=config.poly_degree)
 
 
+def _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset):
+    """Stage-1 spatial pruning: which probed clusters survive the RT test.
+
+    Runs the sphere-intersection filter (``repro.rt``) with the radius
+    derived from the probe-0 row of the thresholds ``tau`` the caller
+    already computed, and gathers the (Q, C) survivor mask at the probed
+    cluster ids (offset by ``rt_offset`` on a shard — the grid is global).
+    Probe 0 is always kept (nearest-probe backstop), so a query whose
+    sphere misses everything still degrades to a nprobe=1 search instead
+    of returning sentinels. Returns (Q, nprobe) bool.
+    """
+    from repro import rt as rt_lib
+    radius = rt_lib.query_radius(rt_grid, tau[:, 0, :], rt_scale)
+    hits = rt_lib.survivor_mask(rt_grid, q, radius)          # (Q, C_global)
+    gcids = cids if rt_offset is None else cids + rt_offset
+    probe_ok = jnp.take_along_axis(hits, gcids, axis=1) > 0
+    return probe_ok.at[:, 0].set(True)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("nprobe", "k", "mode", "metric", "impl"))
+                   static_argnames=("nprobe", "k", "mode", "metric", "impl",
+                                    "prefilter"))
 def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
                   k: int, mode: str, metric: str, thres_scale: float,
-                  impl: str = "ref", side: SideBuffer | None = None):
+                  impl: str = "ref", side: SideBuffer | None = None,
+                  prefilter: str = "scan", rt_grid=None,
+                  rt_scale: float = 1.0, rt_offset=None):
     """One jitted query batch. Returns (scores (Q,k), ids (Q,k)).
 
     impl="ref"    — pure-jnp reference path (semantics of record)
     impl="pallas" — fused Pallas kernels (TPU path; interpret=True on CPU)
     side          — optional overflow buffer of online inserts, merged into
                     the final top-k with in-cluster-identical scoring.
+    prefilter     — "scan" (dense, every probed cluster scanned) or "rt"
+                    (RT-core-style sphere-intersection pruning: probes
+                    whose cluster disc the query sphere misses are masked
+                    out of the scans; needs ``rt_grid``, see ``repro.rt``).
     """
     q = queries.astype(jnp.float32)
     nq = q.shape[0]
@@ -215,6 +261,9 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
     codes = index.cluster_codes[cids]                            # (Q, np, P, S)
     valid = index.ivf.valid[cids]                                # (Q, np, P)
     ids = index.ivf.point_ids[cids]                              # (Q, np, P)
+    if prefilter == "rt":
+        probe_ok = _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset)
+        valid = valid & probe_ok[..., None]
 
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -260,14 +309,20 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
     if side is not None:
         # overflow inserts: same per-probe table, same gather+sum, same
         # invalid sentinel — only reachable when the owning cluster is probed
+        # AND (under prefilter="rt") only when that probe survives the
+        # sphere test, exactly like its in-cluster siblings
         if mode == "H":
             tot, probe, ok = _side_gather(mlut, cids, side)
+            if prefilter == "rt":
+                ok = ok & jnp.take_along_axis(probe_ok, probe, axis=1)
             if metric == "ip":
                 tot = tot + jnp.take_along_axis(probe_base, probe, axis=1)
             side_scores = jnp.where(ok, tot,
                                     -jnp.inf if higher_better else jnp.inf)
         else:
-            tot, _, ok = _side_gather(table.astype(jnp.int32), cids, side)
+            tot, probe, ok = _side_gather(table.astype(jnp.int32), cids, side)
+            if prefilter == "rt":
+                ok = ok & jnp.take_along_axis(probe_ok, probe, axis=1)
             side_scores = jnp.where(ok, tot, jnp.int32(-(2 ** 30))
                                     ).astype(jnp.float32)
         flat_scores = jnp.concatenate([flat_scores, side_scores], axis=1)
@@ -282,12 +337,14 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric", "impl",
-                                             "rerank", "fused"))
+                                             "rerank", "fused", "prefilter"))
 def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
                             nprobe: int, k: int, metric: str,
                             thres_scale: float, rerank: int = 0,
                             impl: str = "ref", fused: bool = False,
-                            side: SideBuffer | None = None):
+                            side: SideBuffer | None = None,
+                            prefilter: str = "scan", rt_grid=None,
+                            rt_scale: float = 1.0, rt_offset=None):
     """Mode "H2": int8 hit-count prefilter → exact ADC on top-C survivors.
 
     Beyond-paper: converts JUNO's dynamic skip into a static-shape candidate
@@ -322,6 +379,9 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
     codes = index.cluster_codes[cids]                            # (Q,np,P,S)
     valid = index.ivf.valid[cids]
     ids = index.ivf.point_ids[cids]
+    if prefilter == "rt":
+        probe_ok = _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset)
+        valid = valid & probe_ok[..., None]
 
     from repro.kernels import ops as kops
     if impl == "pallas":
@@ -374,8 +434,11 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
         exact = exact + jnp.take_along_axis(probe_base, cand_probe, axis=1)
     if side is not None:
         # side points bypass stage 1 (the buffer is tiny) and join the exact
-        # rerank pool directly, scored identically to in-cluster survivors
+        # rerank pool directly, scored identically to in-cluster survivors —
+        # including (under prefilter="rt") the probe's sphere-test verdict
         tot, probe, ok = _side_gather(mlut, cids, side)
+        if prefilter == "rt":
+            ok = ok & jnp.take_along_axis(probe_ok, probe, axis=1)
         if metric == "ip":
             tot = tot + jnp.take_along_axis(probe_base, probe, axis=1)
         exact = jnp.concatenate(
@@ -401,14 +464,73 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
            k: int = 100, mode: str = "H", metric: str = "l2",
            thres_scale: float = 1.0, batch: int = 64, impl: str = "ref",
            rerank: int = 0, fused: bool = False,
-           side: SideBuffer | None = None):
-    """Public search API — chunks queries through the jitted batch kernel.
+           side: SideBuffer | None = None, prefilter: str = "scan",
+           rt_grid=None, rt_scale: float = 1.0):
+    """Search the index — the public online API (paper Alg. 2).
 
-    ``fused=True`` (mode "H2" only) serves the two-stage search through the
-    fused hit-count→masked-ADC kernel path; results carry identical top-k
-    ids to the composed path (see ``_search_batch_two_stage``)."""
+    Chunks queries through the jitted batch kernels, padding the last
+    chunk with edge-replicated rows (in-distribution work whose results
+    are sliced off).
+
+    Parameters
+    ----------
+    index : JunoIndexData
+        A built index (:func:`build`).
+    queries : jnp.ndarray
+        (Q, D) f32 query vectors.
+    nprobe : int
+        Clusters probed per query (stage-A budget).
+    k : int
+        Results per query.
+    mode : str
+        Operating point — "H" (exact selective distances), "M"
+        (reward/penalty hit count), "L" (plain hit count) or "H2"
+        (two-stage hit-count prefilter → exact rerank).
+    metric : str
+        "l2" | "ip".
+    thres_scale : float
+        Multiplier on the calibrated selectivity thresholds τ.
+    batch : int
+        Queries per jitted call (one compiled program per distinct batch).
+    impl : str
+        "ref" (pure-jnp semantics of record) or "pallas" (TPU kernels;
+        interpret mode off-TPU).
+    rerank : int
+        Mode "H2" stage-2 candidate budget C (0 → ``4 * k``).
+    fused : bool
+        Mode "H2" only: serve both stages through the fused
+        hit-count→masked-ADC kernel path; top-k ids are identical to the
+        composed path (see ``_search_batch_two_stage``).
+    side : SideBuffer, optional
+        Overflow buffer of online inserts, merged into the final top-k
+        with in-cluster-identical scoring.
+    prefilter : str
+        "scan" (default — every probed cluster is scanned) or "rt"
+        (RT-core-style sphere-intersection pruning, ``repro.rt``: probes
+        whose cluster disc the query sphere misses are masked out ahead
+        of the hit-count / masked-ADC scans; at full-coverage radii the
+        results are identical to "scan").
+    rt_grid : repro.rt.CentroidGrid, optional
+        The spatial index required by ``prefilter="rt"``
+        (``rt.build_grid``).
+    rt_scale : float
+        Query-sphere radius knob for "rt" (monotone: larger ⇒ more
+        survivors; very large values reproduce "scan" exactly).
+
+    Returns
+    -------
+    tuple of jnp.ndarray
+        ``(scores (Q, k) f32, ids (Q, k) int32)``; scores are distances
+        (lower better) for l2 H/H2, similarities/counts (higher better)
+        otherwise.
+    """
     if fused and mode != "H2":
         raise ValueError(f"fused=True requires mode='H2', got mode={mode!r}")
+    if prefilter not in ("scan", "rt"):
+        raise ValueError(f"unknown prefilter {prefilter!r}")
+    if prefilter == "rt" and rt_grid is None:
+        raise ValueError("prefilter='rt' requires rt_grid (rt.build_grid)")
+    rt_kw = dict(prefilter=prefilter, rt_grid=rt_grid, rt_scale=rt_scale)
     nq = queries.shape[0]
     out_s, out_i = [], []
     for i in range(0, nq, batch):
@@ -424,11 +546,11 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
             s, ids = _search_batch_two_stage(
                 index, qb, nprobe=nprobe, k=k, metric=metric,
                 thres_scale=thres_scale, rerank=rerank, impl=impl,
-                fused=fused, side=side)
+                fused=fused, side=side, **rt_kw)
         else:
             s, ids = _search_batch(index, qb, nprobe=nprobe, k=k, mode=mode,
                                    metric=metric, thres_scale=thres_scale,
-                                   impl=impl, side=side)
+                                   impl=impl, side=side, **rt_kw)
         out_s.append(s[:batch - pad])
         out_i.append(ids[:batch - pad])
     return jnp.concatenate(out_s), jnp.concatenate(out_i)
@@ -486,6 +608,28 @@ class MutableIndexBase:
     def _labels_codes(self, pts: jnp.ndarray):
         raise NotImplementedError
 
+    def _rt_centroids(self) -> jnp.ndarray:
+        """(C, D) replicated centroids for rt-grid maintenance."""
+        raise NotImplementedError
+
+    def _rt_on_insert(self, pts: jnp.ndarray, labels: np.ndarray) -> None:
+        """Post-insert spatial-index maintenance (shared by subclasses).
+
+        Called once per committed insert batch with the raw points and
+        their owning clusters; when an ``repro.rt`` grid is attached
+        (``self.rt_grid``), grows the touched clusters' projected reaches
+        so the sphere filter never drops a cluster holding a fresh point.
+        No-op without a grid.
+        """
+        if getattr(self, "rt_grid", None) is None:
+            return
+        from repro import rt as rt_lib
+        res = (np.asarray(pts, np.float32)
+               - np.asarray(self._rt_centroids())[labels])
+        rp = res @ np.asarray(self.rt_grid.proj)
+        self.rt_grid = rt_lib.update_radii(
+            self.rt_grid, labels, np.sqrt(np.sum(rp * rp, axis=-1)))
+
     def _apply_insert(self, cl: list[int], sl: list[int], ids: np.ndarray,
                       codes: jnp.ndarray) -> None:
         raise NotImplementedError
@@ -496,13 +640,16 @@ class MutableIndexBase:
     # ---- introspection ---------------------------------------------------
     @property
     def n_live(self) -> int:
+        """Number of live (non-tombstoned) points in the index."""
         return len(self._loc)
 
     @property
     def side_fill(self) -> int:
+        """Number of occupied side-buffer slots."""
         return self.side.capacity - len(self._side_free)
 
     def free_slots(self, cluster: int) -> int:
+        """Free padded slots remaining in ``cluster``."""
         return len(self._free[cluster])
 
     # ---- mutation --------------------------------------------------------
@@ -569,6 +716,7 @@ class MutableIndexBase:
                     jnp.asarray(labels[s_sel], jnp.int32)),
                 ids=self.side.ids.at[pos_j].set(jnp.asarray(ids_np[s_sel])),
                 valid=self.side.valid.at[pos_j].set(True))
+        self._rt_on_insert(pts, labels)
         return new_ids
 
     def delete(self, ids) -> int:
@@ -635,10 +783,19 @@ class MutableJunoIndex(MutableIndexBase):
     points back into cluster slots freed by deletes — a search no-op by
     construction (side points are scored with the identical gather an
     in-cluster point gets).
+
+    An optional :class:`repro.rt.CentroidGrid` rides along for
+    ``search(prefilter="rt")`` (attach one, or let ``ensure_rt_grid``
+    build it lazily); inserts keep it valid by growing the touched
+    clusters' reaches — cell membership never changes because centroids
+    never move — and deletes leave it alone (a stale larger reach only
+    over-covers).
     """
 
-    def __init__(self, data: JunoIndexData, *, side_capacity: int = 256):
+    def __init__(self, data: JunoIndexData, *, side_capacity: int = 256,
+                 rt_grid=None):
         self.data = data
+        self.rt_grid = rt_grid
         self._init_bookkeeping(data.ivf.valid, data.ivf.point_ids,
                                side_capacity=side_capacity,
                                first_new_id=int(data.codes.shape[0]),
@@ -646,6 +803,31 @@ class MutableJunoIndex(MutableIndexBase):
 
     def _labels_codes(self, pts):
         return _label_encode(pts, self.data.ivf.centroids, self.data.codebook)
+
+    # ---- RT prefilter grid ----------------------------------------------
+    def ensure_rt_grid(self, *, metric: str = "l2", **kw):
+        """Build and attach the ``repro.rt`` centroid grid if absent.
+
+        Parameters
+        ----------
+        metric : str
+            "l2" | "ip" — forwarded to ``rt.build_grid`` calibration.
+        **kw
+            Remaining ``rt.build_grid`` keyword arguments.
+
+        Returns
+        -------
+        repro.rt.CentroidGrid
+            The attached grid.
+        """
+        if self.rt_grid is None:
+            from repro import rt as rt_lib
+            self.rt_grid = rt_lib.build_grid(self.data, metric=metric, **kw)
+        return self.rt_grid
+
+    def _rt_centroids(self):
+        """Centroids for rt-grid maintenance (the index's own)."""
+        return self.data.ivf.centroids
 
     def _apply_insert(self, cl, sl, ids, codes):
         cl_j, sl_j = jnp.asarray(cl), jnp.asarray(sl)
@@ -664,9 +846,30 @@ class MutableJunoIndex(MutableIndexBase):
         self.data = self.data._replace(ivf=ivf)
 
     # ---- query -----------------------------------------------------------
-    def search(self, queries, **kw):
+    def search(self, queries, *, prefilter: str = "scan", **kw):
         """Side-buffer-aware :func:`search` over the current index state.
-        An empty side buffer is elided so the no-spill hot path compiles and
-        runs exactly as the immutable index's."""
+
+        An empty side buffer is elided so the no-spill hot path compiles
+        and runs exactly as the immutable index's. ``prefilter="rt"``
+        routes stage 1 through the sphere-intersection filter, lazily
+        building the grid on first use (``ensure_rt_grid``).
+
+        Parameters
+        ----------
+        queries : jnp.ndarray
+            (Q, D) f32 query vectors.
+        prefilter : str
+            "scan" | "rt" — see :func:`search`.
+        **kw
+            Remaining :func:`search` keyword arguments.
+
+        Returns
+        -------
+        tuple of jnp.ndarray
+            ``(scores (Q, k), ids (Q, k))`` as :func:`search`.
+        """
         side = self.side if self.side_fill else None
-        return search(self.data, queries, side=side, **kw)
+        if prefilter == "rt" and kw.get("rt_grid") is None:
+            kw["rt_grid"] = self.ensure_rt_grid(metric=kw.get("metric", "l2"))
+        return search(self.data, queries, side=side, prefilter=prefilter,
+                      **kw)

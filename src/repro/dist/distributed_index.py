@@ -71,12 +71,29 @@ def side_pspecs() -> SideBuffer:
                       valid=P(None))
 
 
+def grid_pspecs():
+    """CentroidGrid-shaped tree of PartitionSpecs: fully replicated.
+
+    The rt grid indexes GLOBAL cluster ids and is a few KB of cell
+    tables, so every shard carries the whole thing and localizes its
+    probe lookups with a cluster-id offset (see
+    ``make_distributed_search(prefilter="rt")``).
+    """
+    from repro.rt import CentroidGrid
+    return CentroidGrid(
+        proj=P(None, None), lo=P(None), hi=P(None), boxes=P(None, None),
+        cell_ids=P(None, None), cell_c0=P(None, None), cell_c1=P(None, None),
+        slot_reach=P(None, None), cell_reach=P(None), slot_of=P(None),
+        radius_scale=P(), radius_bias=P())
+
+
 def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
                             mode: str = "H", metric: str = "l2",
                             thres_scale: float = 1.0, impl: str = "ref",
                             rerank: int = 0, fused: bool = False,
-                            with_side: bool = False):
-    """Build ``dsearch(sharded_index, queries[, side]) -> (scores, ids)``.
+                            with_side: bool = False,
+                            prefilter: str = "scan", rt_scale: float = 1.0):
+    """Build ``dsearch(sharded_index, queries[, side][, rt_grid])``.
 
     ``local_nprobe`` is the probe budget PER SHARD (global work scales with
     the mesh, matching the paper's fixed per-chip scan cost). The returned
@@ -94,9 +111,20 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     and can never match a probed local cluster), so every side point is
     scored by exactly the shard that owns its cluster — the same routing
     rule inserts follow.
+
+    With ``prefilter="rt"`` the callable takes a replicated
+    :class:`repro.rt.CentroidGrid` as its LAST argument: the grid indexes
+    global cluster ids, so each shard runs the identical
+    sphere-intersection filter and looks its local probes up at
+    ``local_cid + shard_offset`` — the pruning decision for any cluster
+    is the same on every shard, and the exact global merge is unchanged
+    up to which probes each shard masked out (at full-coverage radii the
+    results match ``prefilter="scan"`` exactly).
     """
     if fused and mode != "H2":
         raise ValueError(f"fused=True requires mode='H2', got mode={mode!r}")
+    if prefilter not in ("scan", "rt"):
+        raise ValueError(f"unknown prefilter {prefilter!r}")
     axes = tuple(mesh.axis_names)
     gather_axes = axes if len(axes) > 1 else axes[0]
     specs = index_pspecs(mesh)
@@ -104,23 +132,30 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     # better for l2); hit-count modes report counts (higher is better).
     higher_better = metric == "ip" if mode in ("H", "H2") else True
 
-    def local_search(idx: JunoIndexData, queries: jnp.ndarray,
-                     side: SideBuffer | None = None):
+    def local_search(idx: JunoIndexData, queries: jnp.ndarray, *rest):
+        rest = list(rest)
+        side = rest.pop(0) if with_side else None
+        rt_grid = rest.pop(0) if prefilter == "rt" else None
+        n_local = idx.ivf.centroids.shape[0]
+        lin = jnp.int32(0)
+        for ax in axes:
+            lin = lin * mesh.shape[ax] + jax.lax.axis_index(ax)
         if side is not None:
-            n_local = idx.ivf.centroids.shape[0]
-            lin = jnp.int32(0)
-            for ax in axes:
-                lin = lin * mesh.shape[ax] + jax.lax.axis_index(ax)
             side = side._replace(cluster=side.cluster - lin * n_local)
+        rt_kw = {}
+        if prefilter == "rt":
+            rt_kw = dict(prefilter="rt", rt_grid=rt_grid, rt_scale=rt_scale,
+                         rt_offset=lin * n_local)
         if mode == "H2":
             s, ids = _search_batch_two_stage(
                 idx, queries, nprobe=local_nprobe, k=k, metric=metric,
                 thres_scale=thres_scale, rerank=rerank, impl=impl,
-                fused=fused, side=side)
+                fused=fused, side=side, **rt_kw)
         else:
             s, ids = _search_batch(
                 idx, queries, nprobe=local_nprobe, k=k, mode=mode,
-                metric=metric, thres_scale=thres_scale, impl=impl, side=side)
+                metric=metric, thres_scale=thres_scale, impl=impl, side=side,
+                **rt_kw)
         nq = queries.shape[0]
         key = s if higher_better else -s
         keys = jax.lax.all_gather(key, gather_axes)       # (shards, Q, k)
@@ -135,6 +170,8 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     in_specs = (specs, P(None, None))
     if with_side:
         in_specs = in_specs + (side_pspecs(),)
+    if prefilter == "rt":
+        in_specs = in_specs + (grid_pspecs(),)
     fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
                    out_specs=(P(None, None), P(None, None)),
                    check_rep=False)
@@ -191,16 +228,23 @@ class DistributedMutableIndex(MutableIndexBase):
     by the routed scatter updaters above — each insert/delete lands on the
     shard owning its cluster, and ``compact()`` (also inherited) folds the
     replicated side buffer back through the same routed scatter.
+
+    Pass ``rt_grid`` (built from the UNSHARDED index via ``rt.build_grid``)
+    to serve ``prefilter="rt"`` searches: inserts then grow the touched
+    clusters' projected reaches exactly as :class:`MutableJunoIndex` does,
+    and callers hand the CURRENT ``self.rt_grid`` to the callable returned
+    by ``searcher(..., prefilter="rt")`` so mutated reaches take effect.
     """
 
     def __init__(self, idx: JunoIndexData, mesh: Mesh, *,
-                 side_capacity: int = 256):
+                 side_capacity: int = 256, rt_grid=None):
         n_clusters = idx.ivf.point_ids.shape[0]
         n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
         assert n_clusters % n_shards == 0, \
             f"clusters ({n_clusters}) must divide evenly over {n_shards} shards"
         self.mesh = mesh
         self.data = shard_index(idx, mesh)
+        self.rt_grid = rt_grid
         self._insert_fn = make_distributed_insert(mesh)
         self._delete_fn = make_distributed_delete(mesh)
         # replicated small arrays for insert-time encoding
@@ -213,6 +257,10 @@ class DistributedMutableIndex(MutableIndexBase):
 
     def _labels_codes(self, pts):
         return _label_encode(pts, self._centroids, self._codebook)
+
+    def _rt_centroids(self):
+        """Replicated centroids (the grid indexes GLOBAL cluster ids)."""
+        return self._centroids
 
     def _apply_insert(self, cl, sl, ids, codes):
         self.data = self._insert_fn(self.data, jnp.asarray(cl),

@@ -11,7 +11,13 @@
                     masked ADC + top-candidate compaction in ONE kernel
                     (the RT→TC pipelining of §5.5, DESIGN.md §3)
 
-``ops`` holds the jit'd public wrappers (interpret=True off-TPU);
+The cluster-granularity RT stage (sphere-intersection prefilter over the
+centroid grid) lives in ``repro.rt``; its kernel is dispatched from here
+(``ops.rt_sphere_hits``). Contracts and grid/VMEM budgets for everything:
+docs/kernels.md.
+
+``ops`` holds the jit'd public wrappers (interpret=True off-TPU, except
+the serving hot paths which dispatch to host paths — see docs/kernels.md);
 ``ref`` holds the pure-jnp oracles every kernel is tested against.
 """
 from . import ops, ref  # noqa: F401

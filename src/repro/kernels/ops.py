@@ -63,6 +63,7 @@ from . import hit_count as _hit  # noqa: E402
 from . import ivf_filter as _filt  # noqa: E402
 from . import pq_scan as _scan  # noqa: E402
 from . import selective_lut as _lut  # noqa: E402
+from repro.rt import intersect as _rt  # noqa: E402
 
 
 @functools.cache
@@ -167,6 +168,44 @@ def fused_two_stage_scan(mlut: jnp.ndarray, table: jnp.ndarray,
                                       cap_c=cap_c, metric=metric)
     return _fused.fused_two_stage_host(mlut, table, codes, valid,
                                        cap_c=cap_c, metric=metric)
+
+
+def rt_sphere_hits(q0: jnp.ndarray, q1: jnp.ndarray, radius: jnp.ndarray,
+                   boxes: jnp.ndarray, cell_reach: jnp.ndarray,
+                   c0: jnp.ndarray, c1: jnp.ndarray,
+                   slot_reach: jnp.ndarray) -> jnp.ndarray:
+    """RT-core-style sphere-intersection filter (stage-1 spatial pruning).
+
+    Parameters
+    ----------
+    q0, q1, radius : jnp.ndarray
+        (Q,) f32 ray-plane query coordinates and query-sphere radii.
+    boxes : jnp.ndarray
+        (n_cells, 4) f32 per-cell AABBs (kernel path's cell-skip input).
+    cell_reach : jnp.ndarray
+        (n_cells,) f32 per-cell max reach (``-inf`` = empty cell).
+    c0, c1, slot_reach : jnp.ndarray
+        (n_cells, cap) f32 projected centroid planes and per-slot reaches
+        (``-inf`` = pad slot).
+
+    Returns
+    -------
+    jnp.ndarray
+        (Q, n_cells·cap) int8 flat hit table, cell-major.
+
+    Notes
+    -----
+    On TPU this runs the cell-walk Pallas kernel (``rt.intersect``); the
+    AABB pre-test skips a cell's disc tests when no query disc touches
+    it. Off-TPU it dispatches to the dense host path rather than
+    interpret mode — same dispatch rule (and rationale) as
+    :func:`fused_two_stage_scan`; results are identical either way
+    because the cell skip is conservative.
+    """
+    if _on_tpu():
+        return _rt.sphere_hits(q0, q1, radius, boxes, cell_reach,
+                               c0, c1, slot_reach)
+    return _rt.sphere_hits_host(q0, q1, radius, c0, c1, slot_reach)
 
 
 def filter_scores(queries, centroids, centroid_sq, *, metric="l2"):

@@ -80,6 +80,23 @@ def fused_two_stage_ref(lut, table, codes, valid, *, cap_c, metric="l2"):
     return counts, dist, cand, cand_dist
 
 
+def rt_sphere_hits_ref(q0, q1, radius, c0, c1, slot_reach):
+    """Dense oracle for the RT sphere-intersection kernel.
+
+    (Q,),(Q,),(Q,) queries/radii; (n_cells, cap) centroid planes/reaches
+    → (Q, n_cells·cap) int8. hit = ``||qp - cp|| <= R + reach`` via the
+    signed squared compare (``thr >= 0`` guards the ``-inf`` pad/empty
+    sentinels). No cell walk — the kernel's AABB skip is conservative, so
+    results must match this bit-for-bit.
+    """
+    dx = q0[:, None, None] - c0[None]
+    dy = q1[:, None, None] - c1[None]
+    d2 = dx * dx + dy * dy
+    thr = radius[:, None, None] + slot_reach[None]
+    hit = (thr >= 0.0) & (d2 <= thr * thr)
+    return hit.reshape(q0.shape[0], -1).astype(jnp.int8)
+
+
 def ivf_filter_ref(queries, centroids, centroid_sq, *, metric="l2"):
     """(Q,D),(C,D),(C,) → (Q,C): csq - 2 q·c (l2, rank-equivalent) or q·c."""
     dots = queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T

@@ -1,0 +1,24 @@
+"""RT-core-style spatial pruning (`repro.rt`) — the paper's stage-1 filter.
+
+JUNO's hardware contribution maps candidate filtering onto ray-tracing
+cores as query-vs-centroid-sphere intersection tests, pruning pairwise
+distance work before the tensor-core ADC stage (paper §5). This package is
+the TPU re-mapping of that stage (docs/kernels.md §RT):
+
+    grid       — build-time spatial index: uniform cell grid over a 2-D
+                 orthonormal projection of the IVF centroids, per-cell
+                 padded centroid lists, per-cluster projected reaches
+    intersect  — the online Pallas kernel: AABB cell walk + disc-vs-disc
+                 tests emitting the int8 survivor mask (host path off-TPU)
+
+Consumers: ``core.search(prefilter="rt")`` masks non-intersecting probes
+out of the hit-count / masked-ADC scans, ``serve.AnnServeEngine
+(prefilter="rt")`` additionally shrinks the probe budget per request from
+the survivor counts, and ``dist.make_distributed_search(prefilter="rt")``
+applies the same mask per shard. The dense oracle lives in
+``kernels.ref.rt_sphere_hits_ref``; dispatch in ``kernels.ops``.
+"""
+from .grid import (CentroidGrid, build_grid, load_grid,  # noqa: F401
+                   probe_budget, query_radius, routing_state, save_grid,
+                   survivor_mask, update_radii)
+from .intersect import sphere_hits, sphere_hits_host  # noqa: F401

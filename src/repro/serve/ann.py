@@ -20,6 +20,13 @@ compiled programs small and the batches dense:
   tiers fold onto one fused-H2 signature served by the fused
   hit-count→masked-ADC scan (``kernels.ops.fused_two_stage_scan``),
   coalescing both tiers' requests into shared batches; see ``__init__``.
+* **RT-prefilter serving** (``prefilter="rt"``) — every dispatched
+  search masks probes through the sphere-intersection filter
+  (``repro.rt``), and the router shrinks each request's probe budget to
+  the smallest ``RT_NPROBE_BUCKETS`` entry covering its queries'
+  last-surviving-probe ranks (``rt.probe_budget``) — the spatial pruning
+  shows up as smaller jitted scans, not just masked lanes
+  (docs/serving.md).
 
 The engine owns a :class:`repro.core.MutableJunoIndex`: ``insert``/
 ``delete``/``compact`` are served between ticks with no rebuild and no
@@ -42,6 +49,8 @@ from repro.core.juno import (JunoIndexData, MutableJunoIndex, _search_batch,
 
 @dataclasses.dataclass
 class AnnRequest:
+    """One queued search request (inputs + engine-filled results)."""
+
     rid: int
     queries: np.ndarray                 # (q, D) f32
     k: int = 10
@@ -49,6 +58,7 @@ class AnnRequest:
     nprobe: int = 0                     # 0 → engine default for the mode
     recall_target: float = 0.9          # router input when mode == "auto"
     # filled in by the engine
+    rt_probes: int = -1                 # cached rt survivor count (-1 unset)
     scores: Optional[np.ndarray] = None
     ids: Optional[np.ndarray] = None
     done: bool = False
@@ -57,6 +67,7 @@ class AnnRequest:
 
     @property
     def latency(self) -> float:
+        """Submit → completion wall time in seconds."""
         return self.t_done - self.t_submit
 
 
@@ -65,6 +76,11 @@ class AnnServeEngine:
 
     K_BUCKETS = (10, 100)
     NPROBE_BUCKETS = (4, 8, 16, 32)
+    # extended lattice the rt shrink may route DOWN onto: explicit client
+    # knobs still quantize to NPROBE_BUCKETS, but a geometrically prunable
+    # request deserves the finer low end (an nprobe-2 signature exists only
+    # if the workload produces such queries)
+    RT_NPROBE_BUCKETS = (2,) + NPROBE_BUCKETS
     BATCH_BUCKETS = (8, 32, 128)
     MODE_NPROBE = {"L": 8, "M": 8, "H2": 16, "H": 16}
     # recall_target lower bound → mode, checked in order (router table)
@@ -79,13 +95,53 @@ class AnnServeEngine:
                  metric: str = "l2", impl: str = "ref",
                  thres_scale: float = 1.0, side_capacity: int = 256,
                  batch_buckets: tuple[int, ...] | None = None,
-                 fused: bool = False):
+                 fused: bool = False, prefilter: str = "scan",
+                 rt_scale: float = 1.0):
+        """Wrap an index (mutable or not) in a serving engine.
+
+        Parameters
+        ----------
+        index : JunoIndexData or MutableJunoIndex
+            The index to serve (a bare ``JunoIndexData`` is wrapped).
+        metric : str
+            "l2" | "ip".
+        impl : str
+            "ref" | "pallas" — forwarded to the search kernels.
+        thres_scale : float
+            Selectivity-threshold multiplier forwarded to search.
+        side_capacity : int
+            Overflow-buffer capacity when wrapping a bare index.
+        batch_buckets : tuple of int, optional
+            Dynamic-batching bucket sizes (default ``BATCH_BUCKETS``;
+            use small buckets on CPU where per-query cost grows with
+            batch size).
+        fused : bool
+            Serve the H and H2 recall tiers through the fused two-stage
+            kernel path on ONE shared jit signature (see class notes).
+        prefilter : str
+            "scan" | "rt". With "rt" every dispatched search masks
+            non-intersecting probes via the sphere-intersection filter
+            (``repro.rt``), AND the router shrinks each request's probe
+            budget to the smallest ``RT_NPROBE_BUCKETS`` entry covering
+            its queries' last-surviving-probe ranks — fewer clusters
+            scanned per tick for queries whose sphere the grid prunes
+            well.
+        rt_scale : float
+            Radius knob for "rt" (monotone; large ⇒ no pruning).
+        """
         self.index = (index if isinstance(index, MutableJunoIndex)
                       else MutableJunoIndex(index,
                                             side_capacity=side_capacity))
         self.metric = metric
         self.impl = impl
         self.thres_scale = thres_scale
+        if prefilter not in ("scan", "rt"):
+            raise ValueError(f"unknown prefilter {prefilter!r}")
+        self.prefilter = prefilter
+        self.rt_scale = rt_scale
+        self._rt_state = None     # cached (grid, routing_state) for route()
+        if prefilter == "rt":
+            self.index.ensure_rt_grid(metric=metric)
         #: route the high-recall tiers (H and H2) through the fused
         #: two-stage kernel path: both collapse onto ONE jit signature
         #: (mode "H2", rerank = FUSED_RERANK_MULT·k), so their requests
@@ -109,6 +165,29 @@ class AnnServeEngine:
     # ---- request plane ---------------------------------------------------
     def submit(self, queries, *, k: int = 10, mode: str = "auto",
                nprobe: int = 0, recall_target: float = 0.9) -> AnnRequest:
+        """Enqueue a search request; ``step``/``run`` fills its results.
+
+        Parameters
+        ----------
+        queries : array-like
+            (q, D) f32 query rows (a single (D,) vector is promoted).
+        k : int
+            Results per query (rounded up to a ``K_BUCKETS`` entry).
+        mode : str
+            "H" | "M" | "L" | "H2", or "auto" to route by
+            ``recall_target``.
+        nprobe : int
+            Explicit probe budget; 0 uses the mode default
+            (``MODE_NPROBE``), then rounds onto ``NPROBE_BUCKETS``.
+        recall_target : float
+            Router input for ``mode="auto"`` (the per-request SLA knob).
+
+        Returns
+        -------
+        AnnRequest
+            The queued request; after serving, ``.scores``/``.ids`` are
+            (q, k) arrays and ``.done`` is True.
+        """
         req = AnnRequest(rid=self._rid, queries=np.atleast_2d(
             np.asarray(queries, np.float32)), k=k, mode=mode, nprobe=nprobe,
             recall_target=recall_target, t_submit=time.perf_counter())
@@ -120,7 +199,25 @@ class AnnServeEngine:
         """Resolve per-request knobs to one static jit signature.
 
         With ``fused=True`` the H recall tier folds into the H2 signature
-        (see ``__init__``), so H and H2 requests batch together."""
+        (see ``__init__``), so H and H2 requests batch together. With
+        ``prefilter="rt"`` the probe budget additionally shrinks to the
+        smallest bucket covering the request's rt survivor counts — the
+        RT filter's throughput win on a batch-oriented backend: clusters
+        the sphere test prunes are not merely masked, the whole jitted
+        scan runs at a smaller nprobe.
+
+        Parameters
+        ----------
+        req : AnnRequest
+            The request to resolve (its ``rt_probes`` cache is filled on
+            first call).
+
+        Returns
+        -------
+        tuple
+            ``(k, mode, nprobe)`` — one point of the static signature
+            lattice.
+        """
         mode = req.mode
         if mode == "auto":
             mode = next(m for lo, m in self.ROUTES if req.recall_target >= lo)
@@ -130,6 +227,23 @@ class AnnServeEngine:
         nprobe = req.nprobe or self.MODE_NPROBE[mode]
         nprobe = next((b for b in self.NPROBE_BUCKETS if b >= nprobe),
                       self.NPROBE_BUCKETS[-1])
+        if self.prefilter == "rt":
+            if req.rt_probes < 0:
+                from repro import rt as rt_lib
+                grid = self.index.rt_grid
+                if self._rt_state is None or self._rt_state[0] is not grid:
+                    # inserts replace the grid object (update_radii), so
+                    # identity is the cache key for the host routing state
+                    self._rt_state = (grid, rt_lib.routing_state(
+                        grid, self.index.data))
+                req.rt_probes = int(rt_lib.probe_budget(
+                    grid, self.index.data, req.queries, metric=self.metric,
+                    scale=self.rt_scale, thres_scale=self.thres_scale,
+                    max_probes=nprobe, state=self._rt_state[1]).max())
+            shrunk = next((b for b in self.RT_NPROBE_BUCKETS
+                           if b >= max(req.rt_probes, 1)),
+                          self.RT_NPROBE_BUCKETS[-1])
+            nprobe = min(nprobe, shrunk)
         nprobe = min(nprobe, self.index.data.ivf.centroids.shape[0])
         return k, mode, nprobe
 
@@ -191,17 +305,22 @@ class AnnServeEngine:
         return rows
 
     def _dispatch(self, qb, k, mode, nprobe, side):
+        """Run one padded batch through the jitted search for its mode."""
+        rt_kw = {}
+        if self.prefilter == "rt":
+            rt_kw = dict(prefilter="rt", rt_grid=self.index.rt_grid,
+                         rt_scale=self.rt_scale)
         if mode == "H2":
             return _search_batch_two_stage(
                 self.index.data, qb, nprobe=nprobe, k=k, metric=self.metric,
                 thres_scale=self.thres_scale, impl=self.impl,
                 fused=self.fused,
                 rerank=self.FUSED_RERANK_MULT * k if self.fused else 0,
-                side=side)
+                side=side, **rt_kw)
         return _search_batch(
             self.index.data, qb, nprobe=nprobe, k=k, mode=mode,
             metric=self.metric, thres_scale=self.thres_scale,
-            impl=self.impl, side=side)
+            impl=self.impl, side=side, **rt_kw)
 
     def run(self, max_ticks: int = 100_000) -> int:
         """Drain the queue; returns total queries served."""
@@ -214,20 +333,43 @@ class AnnServeEngine:
 
     # ---- mutation plane (control path, between ticks) --------------------
     def insert(self, points) -> list[int]:
+        """Insert a (B, D) point batch into the served index.
+
+        Runs between ticks on the control path — no rebuild, no jit
+        signature change (see :class:`repro.core.MutableJunoIndex`).
+        Returns the assigned global ids.
+        """
         ids = self.index.insert(points)
         self.stats["inserts"] += len(ids)
         return ids
 
     def delete(self, ids) -> int:
+        """Tombstone points by global id; returns how many were removed.
+
+        All-or-nothing: an unknown or duplicated id raises before any
+        state is touched.
+        """
         n = self.index.delete(ids)
         self.stats["deletes"] += n
         return n
 
     def compact(self) -> int:
+        """Fold side-buffer spills back into freed cluster slots.
+
+        A search no-op by construction; returns how many points moved.
+        """
         return self.index.compact()
 
     # ---- observability ---------------------------------------------------
     def latency_stats(self) -> dict:
+        """Latency percentiles over completed requests.
+
+        Returns
+        -------
+        dict
+            ``{"n", "p50", "p95", "max"}`` in seconds (submit → done), or
+            ``{"n": 0}`` when nothing has completed.
+        """
         lats = sorted(r.latency for r in self.completed)
         if not lats:
             return {"n": 0}

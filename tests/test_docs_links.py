@@ -1,0 +1,26 @@
+"""Docs-site integrity in tier 1: pages exist, intra-repo links resolve.
+
+The docs-check CI job runs the same checker as a standalone gate
+(``tools/check_links.py``); this test keeps "README links resolve and the
+four docs pages exist" enforced wherever plain pytest runs.
+"""
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_links  # noqa: E402
+
+
+def test_docs_pages_exist():
+    for page in ["index.md", "architecture.md", "kernels.md", "serving.md",
+                 "benchmarks.md"]:
+        assert os.path.exists(os.path.join(REPO, "docs", page)), page
+
+
+def test_no_dead_intra_repo_links():
+    files = check_links.default_files(REPO)
+    assert any(f.endswith("README.md") for f in files)
+    bad = check_links.dead_links(files)
+    assert not bad, f"dead links: {bad}"

@@ -1,0 +1,69 @@
+"""Public-API docstring gate.
+
+Every symbol a user reaches through the documented entry points —
+``repro.core``'s index/search API, the serving engine, the ``ops.*``
+kernel dispatchers and the ``repro.rt`` builders — must carry a
+non-trivial docstring (shape/dtype contracts live there; docs/kernels.md
+and docs/serving.md link to them instead of duplicating). CI additionally
+runs ruff's pydocstyle D1xx subset over the same modules (the docs-check
+job); this test keeps the guarantee in tier 1 where no ruff is installed.
+"""
+import inspect
+
+import pytest
+
+import repro.core as core
+import repro.rt as rt
+from repro.core.juno import MutableIndexBase, MutableJunoIndex
+from repro.kernels import ops
+from repro.serve.ann import AnnRequest, AnnServeEngine
+
+PUBLIC = [
+    # repro.core index lifecycle
+    core.JunoConfig, core.build, core.search, core.exact_topk,
+    core.recall_1_at_k, core.recall_n_at_k, core.SideBuffer,
+    core.empty_side_buffer,
+    # mutable index
+    MutableJunoIndex, MutableIndexBase.insert, MutableIndexBase.delete,
+    MutableIndexBase.compact, MutableJunoIndex.search,
+    MutableJunoIndex.ensure_rt_grid,
+    # serving engine
+    AnnServeEngine, AnnRequest, AnnServeEngine.__init__,
+    AnnServeEngine.submit, AnnServeEngine.route, AnnServeEngine.step,
+    AnnServeEngine.run, AnnServeEngine.insert, AnnServeEngine.delete,
+    AnnServeEngine.compact, AnnServeEngine.latency_stats,
+    # kernel dispatchers
+    ops.build_selective_lut, ops.masked_adc_scan, ops.hit_count_scan,
+    ops.fused_two_stage_scan, ops.rt_sphere_hits, ops.filter_scores,
+    ops.slab_onehot_dot,
+    # rt builders
+    rt.CentroidGrid, rt.build_grid, rt.query_radius, rt.survivor_mask,
+    rt.routing_state, rt.probe_budget, rt.update_radii, rt.save_grid,
+    rt.load_grid, rt.sphere_hits, rt.sphere_hits_host,
+]
+
+
+def _name(obj):
+    mod = getattr(obj, "__module__", "?")
+    qual = getattr(obj, "__qualname__", getattr(obj, "__name__", repr(obj)))
+    return f"{mod}.{qual}"
+
+
+@pytest.mark.parametrize("obj", PUBLIC, ids=_name)
+def test_public_symbol_has_docstring(obj):
+    doc = inspect.getdoc(obj)
+    assert doc and len(doc.split()) >= 5, (
+        f"{_name(obj)} lacks a meaningful docstring")
+
+
+def test_public_modules_have_docstrings():
+    import repro.core.juno
+    import repro.dist.distributed_index
+    import repro.kernels.ref
+    import repro.rt.grid
+    import repro.rt.intersect
+    import repro.serve.ann
+    for mod in [core, rt, ops, repro.core.juno, repro.serve.ann,
+                repro.rt.grid, repro.rt.intersect, repro.kernels.ref,
+                repro.dist.distributed_index]:
+        assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__

@@ -1,0 +1,356 @@
+"""Differential harness for the RT-core-style sphere-intersection filter.
+
+The rt prefilter (``repro.rt``) must be a *pruning overlay*, never a new
+semantics: at full-coverage radii every path (H, H2, fused H2, the serving
+engine, the 1-device distributed search) must return ids identical to the
+dense-scan path, and at calibrated radii the recall floors pin the pruning
+quality across {l2, ip}. The kernel itself is validated against the dense
+oracle (``kernels.ref.rt_sphere_hits_ref``) on adversarial grids — ragged
+last cells, ``-inf`` pad/empty sentinels, zero and huge radii — in
+interpret mode (the ``interpret``-marked test, own CI job); the host path
+shares the oracle's body by delegation (single source of truth), and the
+dispatcher plumbing is pinned in tier 1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rt
+from repro.core import (JunoConfig, MutableJunoIndex, build, exact_topk,
+                        recall_n_at_k, search)
+from repro.data import DEEP_LIKE, TTI_LIKE, make_dataset
+from repro.kernels import ref
+from repro.serve.ann import AnnServeEngine
+
+NPROBE = 16
+FULL = 1e6   # rt_scale at which every sphere covers every cell
+
+# measured (2026-08, jax 0.4.37 CPU, this fixture): l2 H=0.988 H2=0.931,
+# ip H=0.967 H2=0.723 — floors ~15-40% below, same style as
+# test_recall_matrix.py (rt H2 on ip BEATS the dense-scan 0.435: pruning
+# junk clusters out of stage 1 improves the candidate set)
+RT_FLOORS_10_AT_100 = {
+    ("l2", "H"): 0.85, ("l2", "H2"): 0.75,
+    ("ip", "H"): 0.75, ("ip", "H2"): 0.40,
+}
+
+
+@pytest.fixture(scope="module")
+def rt_data():
+    out = {}
+    for metric, spec in [("l2", DEEP_LIKE), ("ip", TTI_LIKE)]:
+        pts, q = make_dataset(spec, 5000, 48, key=jax.random.PRNGKey(7))
+        cfg = JunoConfig(n_clusters=32, n_entries=32, calib_queries=24,
+                         kmeans_iters=5, metric=metric)
+        idx = build(pts, cfg)
+        grid = rt.build_grid(idx, metric=metric)
+        _, gt10 = exact_topk(q, pts, k=10, metric=metric)
+        out[metric] = (pts, q, idx, grid, gt10)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full-coverage parity: rt must degenerate to the dense scan exactly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("mode,fused", [("H", False), ("H2", False),
+                                        ("H2", True)])
+def test_full_coverage_matches_scan(rt_data, metric, mode, fused):
+    _, q, idx, grid, _ = rt_data[metric]
+    kw = dict(nprobe=NPROBE, k=100, mode=mode, metric=metric, fused=fused)
+    _, want = search(idx, q, **kw)
+    _, got = search(idx, q, prefilter="rt", rt_grid=grid, rt_scale=FULL,
+                    **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_engine_full_coverage_matches_scan(rt_data, metric):
+    _, q, idx, _, _ = rt_data[metric]
+    q = np.asarray(q)[:8]
+    outs = {}
+    for pf, kw in [("scan", {}), ("rt", dict(prefilter="rt",
+                                             rt_scale=FULL))]:
+        eng = AnnServeEngine(idx, metric=metric, batch_buckets=(8, 16), **kw)
+        req = eng.submit(q, k=10, mode="H2")
+        eng.run()
+        outs[pf] = req.ids
+    np.testing.assert_array_equal(outs["rt"], outs["scan"])
+
+
+def test_dist_1device_full_coverage(rt_data):
+    from jax.sharding import Mesh
+
+    from repro.dist.distributed_index import (make_distributed_search,
+                                              shard_index)
+    _, q, idx, grid, _ = rt_data["l2"]
+    q = jnp.asarray(q)[:16]
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sidx = shard_index(idx, mesh)
+    dsearch = make_distributed_search(mesh, NPROBE, 10, mode="H2",
+                                      metric="l2", prefilter="rt",
+                                      rt_scale=FULL)
+    _, got = dsearch(sidx, q, grid)
+    _, want = search(idx, q, nprobe=NPROBE, k=10, mode="H2", metric="l2",
+                     batch=q.shape[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# calibrated radii: pruning quality floors
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cell", sorted(RT_FLOORS_10_AT_100))
+def test_rt_recall_floor(rt_data, cell):
+    metric, mode = cell
+    _, q, idx, grid, gt10 = rt_data[metric]
+    _, ids = search(idx, q, nprobe=NPROBE, k=100, mode=mode, metric=metric,
+                    prefilter="rt", rt_grid=grid)
+    r = float(recall_n_at_k(ids, gt10))
+    floor = RT_FLOORS_10_AT_100[cell]
+    assert r >= floor, (
+        f"rt recall@10-in-100 regression: {metric}/{mode} = {r:.3f} < {floor}")
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_survivors_monotone_in_scale(rt_data, metric):
+    """Bigger rt_scale must only ever ADD survivors (monotone radius)."""
+    _, q, idx, grid, _ = rt_data[metric]
+    qj = jnp.asarray(q)
+    tau = jnp.ones((qj.shape[0], idx.codes.shape[1]), jnp.float32)
+    masks = [np.asarray(rt.survivor_mask(
+        grid, qj, rt.query_radius(grid, tau, s))) for s in (1.0, 4.0, FULL)]
+    assert np.all(masks[0] <= masks[1]) and np.all(masks[1] <= masks[2])
+    assert masks[2].all()   # full coverage reaches every cluster
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_probe_budget_covers_all_survivors(rt_data, metric):
+    """No probe ranked beyond the routed budget may survive the rt test —
+    the property that makes the engine's nprobe shrink lossless w.r.t.
+    the masked search."""
+    from repro.core import density as density_lib
+    from repro.core.ivf import filter_clusters
+    _, q, idx, grid, _ = rt_data[metric]
+    qj = jnp.asarray(q)
+    budget = rt.probe_budget(grid, idx, np.asarray(q), metric=metric,
+                             max_probes=NPROBE)
+    _, cids = filter_clusters(qj, idx.ivf, nprobe=NPROBE, metric=metric)
+    if metric == "l2":
+        res = qj - idx.ivf.centroids[cids[:, 0]]
+    else:
+        res = qj
+    tau = density_lib.predict_threshold(
+        idx.density, res.reshape(res.shape[0], -1, idx.codebook.sub_dim), 1.0)
+    mask = np.asarray(rt.survivor_mask(
+        grid, qj, rt.query_radius(grid, tau, 1.0)))
+    probe_hits = mask[np.arange(len(q))[:, None], np.asarray(cids)] > 0
+    for i in range(len(q)):
+        assert not probe_hits[i, budget[i]:].any(), (
+            f"query {i}: survivor beyond routed budget {budget[i]}")
+
+
+def test_side_buffer_respects_rt_mask(rt_data):
+    """Side-buffer points must get the SAME rt verdict as their in-cluster
+    siblings: identical ids to the dense scan at full coverage, and
+    ``compact()`` stays a search no-op under the calibrated radius (the
+    spilled point scores the same whether it sits in the buffer or in a
+    cluster slot — including the probe's sphere test)."""
+    pts, q, idx, grid, _ = rt_data["l2"]
+    q = jnp.asarray(q)[:16]
+    mi = MutableJunoIndex(idx, side_capacity=64, rt_grid=grid)
+    # force a spill: fill the fullest cluster's free slots + 1
+    c = int(np.argmin([mi.free_slots(cc)
+                       for cc in range(idx.ivf.point_ids.shape[0])]))
+    cent = np.asarray(idx.ivf.centroids[c])
+    spill = (cent[None] + 0.01 * np.random.default_rng(3).standard_normal(
+        (mi.free_slots(c) + 1, cent.shape[0]))).astype(np.float32)
+    mi.insert(spill)
+    assert mi.side_fill >= 1
+    for mode in ["H", "H2"]:
+        _, want = mi.search(q, nprobe=NPROBE, k=10, mode=mode, metric="l2",
+                            batch=q.shape[0])
+        _, got = mi.search(q, nprobe=NPROBE, k=10, mode=mode, metric="l2",
+                           prefilter="rt", rt_scale=FULL, batch=q.shape[0])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # compact() no-op under rt: free a slot in the owner cluster, search
+    # (side active), fold the spill back in, search again — same answers
+    victim = int(idx.ivf.point_ids[c, 0])
+    mi.delete([victim])
+    s1, i1 = mi.search(q, nprobe=NPROBE, k=10, mode="H", metric="l2",
+                       prefilter="rt", batch=q.shape[0])
+    assert mi.compact() >= 1
+    s2, i2 = mi.search(q, nprobe=NPROBE, k=10, mode="H", metric="l2",
+                       prefilter="rt", batch=q.shape[0])
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=0, atol=0)
+    for row1, row2 in zip(np.asarray(i1), np.asarray(i2)):
+        assert set(row1) == set(row2)
+
+
+# ---------------------------------------------------------------------------
+# grid structure: ragged padding, serialization, insert maintenance
+# ---------------------------------------------------------------------------
+def test_ragged_padding_and_slot_map(rt_data):
+    _, q, idx, grid, _ = rt_data["l2"]
+    c = idx.ivf.centroids.shape[0]
+    slot_of = np.asarray(grid.slot_of)
+    assert len(np.unique(slot_of)) == c            # a slot per cluster
+    ids_flat = np.asarray(grid.cell_ids).reshape(-1)
+    assert sorted(ids_flat[ids_flat >= 0]) == list(range(c))
+    pad = ids_flat < 0
+    assert pad.any(), "fixture should exercise ragged cells"
+    assert np.all(np.isneginf(np.asarray(grid.slot_reach).reshape(-1)[pad]))
+    # pad slots never hit, even at full coverage
+    qj = jnp.asarray(q)
+    tau = jnp.ones((qj.shape[0], idx.codes.shape[1]), jnp.float32)
+    hits = np.asarray(rt.sphere_hits_host(
+        (qj @ grid.proj)[:, 0], (qj @ grid.proj)[:, 1],
+        rt.query_radius(grid, tau, FULL),
+        grid.cell_c0, grid.cell_c1, grid.slot_reach))
+    assert not hits[:, pad].any()
+    assert hits[:, ~pad].all()
+
+
+def test_grid_save_load_roundtrip(rt_data, tmp_path):
+    _, q, idx, grid, _ = rt_data["l2"]
+    path = str(tmp_path / "grid.npz")
+    rt.save_grid(path, grid)
+    loaded = rt.load_grid(path)
+    for name in type(grid)._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(grid, name)),
+                                      np.asarray(getattr(loaded, name)))
+    _, a = search(idx, q[:8], nprobe=NPROBE, k=10, mode="H", metric="l2",
+                  prefilter="rt", rt_grid=grid)
+    _, b = search(idx, q[:8], nprobe=NPROBE, k=10, mode="H", metric="l2",
+                  prefilter="rt", rt_grid=loaded)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_insert_grows_touched_reach_only(rt_data):
+    pts, _, idx, _, _ = rt_data["l2"]
+    mid = MutableJunoIndex(idx, side_capacity=64)
+    grid0 = mid.ensure_rt_grid(metric="l2")
+    before = np.asarray(grid0.slot_reach).copy()
+    # an outlier far from its owning centroid
+    outlier = np.asarray(pts)[0] + 40.0
+    ids = mid.insert(outlier[None])
+    assert len(ids) == 1
+    after = np.asarray(mid.rt_grid.slot_reach)
+    changed = np.flatnonzero(before.reshape(-1) != after.reshape(-1))
+    assert len(changed) == 1                       # only the touched slot
+    slot = changed[0]
+    cluster = int(np.asarray(grid0.cell_ids).reshape(-1)[slot])
+    res = outlier - np.asarray(idx.ivf.centroids)[cluster]
+    rp = np.sqrt(np.sum((res @ np.asarray(grid0.proj)) ** 2))
+    assert after.reshape(-1)[slot] >= rp - 1e-4
+    # cell bound follows the slot bound
+    cell = slot // grid0.capacity
+    assert (np.asarray(mid.rt_grid.cell_reach)[cell]
+            >= after.reshape(-1)[slot] - 1e-6)
+
+
+def test_dist_mutable_rt_grid_maintenance(rt_data):
+    """The sharded mutable index must maintain its rt grid on insert just
+    like the single-device one, and the mutated grid must flow into the
+    rt-prefiltered distributed search."""
+    from jax.sharding import Mesh
+
+    from repro.dist.distributed_index import DistributedMutableIndex
+    pts, q, idx, grid, _ = rt_data["l2"]
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    dmi = DistributedMutableIndex(idx, mesh, side_capacity=64, rt_grid=grid)
+    before = np.asarray(grid.slot_reach).copy()
+    outlier = np.asarray(pts)[0] + 40.0
+    ids = dmi.insert(outlier[None])
+    assert len(ids) == 1
+    after = np.asarray(dmi.rt_grid.slot_reach)
+    changed = np.flatnonzero(before.reshape(-1) != after.reshape(-1))
+    assert len(changed) == 1, "exactly the owner cluster's reach must grow"
+    slot = changed[0]
+    cluster = int(np.asarray(grid.cell_ids).reshape(-1)[slot])
+    res = outlier - np.asarray(idx.ivf.centroids)[cluster]
+    rp = np.sqrt(np.sum((res @ np.asarray(grid.proj)) ** 2))
+    # the owner's disc now contains the fresh point's projection, so any
+    # query sphere touching the point also touches the cluster
+    assert after.reshape(-1)[slot] >= rp - 1e-3
+    dsearch = dmi.searcher(NPROBE, 10, mode="H", metric="l2",
+                           prefilter="rt")
+    _, got = dsearch(dmi.data, jnp.asarray(outlier)[None], dmi.side,
+                     dmi.rt_grid)
+    assert np.asarray(got).shape == (1, 10)
+
+
+# ---------------------------------------------------------------------------
+# kernel differential validation
+# ---------------------------------------------------------------------------
+def _synth_grid(seed, n_cells_side, cap, q):
+    """Random grid honoring the build invariants: slot coords inside their
+    cell's AABB, cell_reach = max slot_reach, -inf pad/empty sentinels."""
+    rng = np.random.default_rng(seed)
+    g = n_cells_side
+    n_cells = g * g
+    lo = np.stack(np.meshgrid(np.arange(g), np.arange(g), indexing="ij"),
+                  -1).reshape(-1, 2) / g
+    boxes = np.concatenate([lo, lo + 1.0 / g], 1).astype(np.float32)
+    counts = rng.integers(0, cap + 1, n_cells)
+    c0 = np.zeros((n_cells, cap), np.float32)
+    c1 = np.zeros((n_cells, cap), np.float32)
+    reach = np.full((n_cells, cap), -np.inf, np.float32)
+    for cell in range(n_cells):
+        k = counts[cell]
+        u = rng.random((k, 2)).astype(np.float32)
+        c0[cell, :k] = boxes[cell, 0] + u[:, 0] / g
+        c1[cell, :k] = boxes[cell, 1] + u[:, 1] / g
+        reach[cell, :k] = np.abs(rng.normal(0, 0.2, k)).astype(np.float32)
+    cell_reach = reach.max(1)
+    q0 = rng.uniform(-0.3, 1.3, q).astype(np.float32)
+    q1 = rng.uniform(-0.3, 1.3, q).astype(np.float32)
+    radius = rng.uniform(0, 0.5, q).astype(np.float32)
+    radius[: q // 4] = 0.0                       # degenerate: point queries
+    radius[q // 4: 2 * (q // 4)] = 10.0          # degenerate: cover-all
+    return tuple(map(jnp.asarray,
+                     (q0, q1, radius, boxes, cell_reach, c0, c1, reach)))
+
+
+def test_dispatcher_uses_oracle_semantics():
+    """Off-TPU, ops.rt_sphere_hits must route to the host path, whose body
+    IS the oracle (single source of truth — delegation, not duplication),
+    so the dispatcher output equals ref by construction; this pins the
+    dispatch plumbing (shapes, dtype, flattening) in tier 1."""
+    from repro.kernels import ops
+    for seed, g, cap, q in [(0, 3, 8, 16), (1, 4, 16, 7), (2, 2, 8, 1)]:
+        q0, q1, r, boxes, creach, c0, c1, reach = _synth_grid(seed, g, cap, q)
+        got = ops.rt_sphere_hits(q0, q1, r, boxes, creach, c0, c1, reach)
+        want = ref.rt_sphere_hits_ref(q0, q1, r, c0, c1, reach)
+        assert got.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.interpret
+@pytest.mark.parametrize("seed,g,cap,q", [(0, 3, 8, 16), (1, 4, 16, 7),
+                                          (2, 2, 8, 1), (3, 5, 24, 33)])
+def test_kernel_interpret_matches_ref(seed, g, cap, q):
+    """The Pallas cell walk must be bit-identical to the dense oracle —
+    the AABB skip is conservative, so it changes work, never results."""
+    q0, q1, r, boxes, cell_reach, c0, c1, reach = _synth_grid(seed, g, cap, q)
+    got = rt.sphere_hits(q0, q1, r, boxes, cell_reach, c0, c1, reach,
+                         interpret=True)
+    want = ref.rt_sphere_hits_ref(q0, q1, r, c0, c1, reach)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.interpret
+def test_kernel_interpret_on_built_grid(rt_data):
+    """Kernel parity on a REAL grid (build-produced layout and sentinels)."""
+    _, q, idx, grid, _ = rt_data["l2"]
+    qj = jnp.asarray(q)
+    qp = qj @ grid.proj
+    tau = jnp.ones((qj.shape[0], idx.codes.shape[1]), jnp.float32)
+    for scale in (1.0, FULL):
+        r = rt.query_radius(grid, tau, scale)
+        got = rt.sphere_hits(qp[:, 0], qp[:, 1], r, grid.boxes,
+                             grid.cell_reach, grid.cell_c0, grid.cell_c1,
+                             grid.slot_reach, interpret=True)
+        want = ref.rt_sphere_hits_ref(qp[:, 0], qp[:, 1], r, grid.cell_c0,
+                                      grid.cell_c1, grid.slot_reach)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,81 @@
+"""Intra-repo markdown link checker (stdlib only — the docs-check CI gate).
+
+Scans the given markdown files (default: README.md, DESIGN.md, docs/*.md)
+for inline links/images ``[text](target)`` and fails on any *intra-repo*
+target that does not exist on disk, resolving relative targets against
+the containing file. External schemes (http/https/mailto) and pure
+in-page anchors (``#...``) are skipped; a ``path#anchor`` target is
+checked for the path part only.
+
+    python tools/check_links.py [FILES...]
+
+Exit code = number of dead links. Also runnable in-process
+(tests/test_docs_links.py) so the guarantee holds in tier 1.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline markdown link/image: [text](target) — good enough for these docs
+# (no reference-style links in the tree); ignores fenced code by requiring
+# the target to not contain whitespace
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def dead_links(paths: list[str]) -> list[tuple[str, int, str]]:
+    """Return (file, line_number, target) for every dead intra-repo link.
+
+    Parameters
+    ----------
+    paths : list of str
+        Markdown files to scan.
+
+    Returns
+    -------
+    list of tuple
+        One entry per dead link, in scan order.
+    """
+    bad = []
+    for path in paths:
+        base = os.path.dirname(os.path.abspath(path))
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                for target in _LINK.findall(line):
+                    if target.startswith(_SKIP_SCHEMES):
+                        continue
+                    if target.startswith("#"):
+                        continue        # in-page anchor
+                    rel = target.split("#", 1)[0]
+                    if not rel:
+                        continue
+                    if not os.path.exists(os.path.join(base, rel)):
+                        bad.append((path, lineno, target))
+    return bad
+
+
+def default_files(root: str | None = None) -> list[str]:
+    """The file set the docs-check job scans, rooted at the repo root."""
+    root = root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = [os.path.join(root, "README.md"), os.path.join(root, "DESIGN.md")]
+    files += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def main(argv: list[str]) -> int:
+    """CLI entry point; returns the number of dead links found."""
+    files = argv or default_files()
+    bad = dead_links(files)
+    for path, lineno, target in bad:
+        print(f"{path}:{lineno}: dead link -> {target}")
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not bad else f'{len(bad)} dead link(s)'}")
+    return len(bad)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
