@@ -2,8 +2,10 @@
 
 Subpackages: ``core`` (the paper's algorithm), ``kernels`` (Pallas),
 ``rt`` (spatial prefilter: the RT-core stage at cluster granularity),
-``models``/``train``/``serve`` (the surrounding LM system), ``dist``
-(sharding / distributed index / checkpointing / fault tolerance),
-``launch`` (meshes + dry-run), ``configs``, ``data``.
+``build`` (out-of-core streaming construction, versioned artifact store,
+online rebuild/hot-swap), ``models``/``train``/``serve`` (the
+surrounding LM system), ``dist`` (sharding / distributed index /
+checkpointing / fault tolerance), ``launch`` (meshes + dry-run),
+``configs``, ``data``.
 Documentation: docs/index.md.
 """

@@ -1,0 +1,22 @@
+"""`repro.build` — out-of-core index construction, artifact store, rebuild.
+
+The offline half of the serving story at scale: `pipeline` streams a
+memory-bounded build (the (N, D) point set is never resident beyond one
+chunk), `store` persists a built index + its rt grid as one versioned,
+integrity-checked artifact, and `rebuild` drains the online side buffer
+and tombstones into a fresh index that `AnnServeEngine.swap_index()`
+installs without taking serving down. See docs/building.md.
+
+Public API:
+    build_streaming, build_streaming_sharded   — streaming build (pipeline)
+    array_source, BuildProbe                   — chunk plumbing (pipeline)
+    split_shards, merge_shards                 — per-shard artifacts (pipeline)
+    save_index, load_index, ArtifactStore      — versioned store (store)
+    config_hash, verify_artifact, ArtifactError
+    rebuild_index                              — side/tombstone drain (rebuild)
+"""
+from .pipeline import (BuildProbe, array_source, build_streaming,  # noqa: F401
+                       build_streaming_sharded, merge_shards, split_shards)
+from .rebuild import rebuild_index  # noqa: F401
+from .store import (ArtifactError, ArtifactStore, config_hash,  # noqa: F401
+                    load_index, save_index, verify_artifact)

@@ -1,0 +1,163 @@
+"""Online rebuild: drain the side buffer and tombstones (`repro.build.rebuild`).
+
+The PR 2 mutability story left one gap: a :class:`~repro.core.juno.SideBuffer`
+spill is scored exactly like an in-cluster point, but it costs an extra
+(Q, B) gather on EVERY search, and ``compact()`` can only fold spills back
+when deletes happen to free slots in the right clusters. This module closes
+the loop: :func:`rebuild_index` re-packs every live point — in-cluster
+survivors keep their slot order, side points are re-encoded into proper
+slots of their owning cluster, tombstoned ids are dropped — into a fresh
+:class:`~repro.core.juno.JunoIndexData`, growing the padded capacity only
+when the live fill demands it (an unchanged capacity keeps every jitted
+search signature warm across the swap).
+
+Because side points were already scored with the identical masked-LUT /
+hit-table gather an in-cluster sibling receives, the rebuilt index returns
+the same search results as the pre-rebuild (base ⊕ side ⊖ tombstones)
+state — bit-identical scores, ids equal up to ``lax.top_k``'s index-order
+tie-break among exactly equal scores (tests/test_build.py pins it).
+
+``AnnServeEngine.swap_index()`` installs the result atomically between
+ticks; ``DistributedMutableIndex.rebuild_shard()`` applies the same repack
+per cluster shard through the routed row scatter.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.juno import JunoIndexData, MutableIndexBase
+
+
+def _reconstructed_sq(centroids, codebook, labels, codes) -> np.ndarray:
+    """|centroid + decode(code)|^2 for points whose raw vector is gone."""
+    from repro.core.pq import decode
+    pts = centroids[labels] + np.asarray(
+        decode(jnp.asarray(codes), codebook))
+    return np.sum(pts * pts, axis=-1).astype(np.float32)
+
+
+def live_points(mid: MutableIndexBase, point_ids: np.ndarray,
+                valid: np.ndarray, cluster_codes: np.ndarray,
+                clusters: range | None = None
+                ) -> list[list[tuple[int, np.ndarray]]]:
+    """Per-cluster live (id, code) lists for a mutable index snapshot.
+
+    In-cluster points come first in slot order, then drained side-buffer
+    points in buffer-position order — the deterministic repack order both
+    the single-device and per-shard rebuilds share.
+
+    Parameters
+    ----------
+    mid : MutableIndexBase
+        The live index (supplies the side buffer).
+    point_ids, valid, cluster_codes : np.ndarray
+        Host snapshots of the padded storage ((C, P), (C, P), (C, P, S)).
+    clusters : range, optional
+        Restrict the scan to these cluster ids (a per-shard rebuild only
+        repacks its own slice; default: all clusters). Entries outside
+        the range stay empty.
+
+    Returns
+    -------
+    list of list
+        ``out[c]`` = ordered ``(global_id, (S,) uint8 code)`` pairs.
+    """
+    n_clusters = point_ids.shape[0]
+    if clusters is None:
+        clusters = range(n_clusters)
+    out: list[list[tuple[int, np.ndarray]]] = [[] for _ in range(n_clusters)]
+    for c in clusters:
+        for slot in np.where(valid[c])[0]:
+            out[c].append((int(point_ids[c, slot]), cluster_codes[c, slot]))
+    side_valid = np.asarray(mid.side.valid)
+    side_cluster = np.asarray(mid.side.cluster)
+    side_ids = np.asarray(mid.side.ids)
+    side_codes = np.asarray(mid.side.codes)
+    for pos in np.where(side_valid)[0]:
+        c = int(side_cluster[pos])
+        if clusters.start <= c < clusters.stop:
+            out[c].append((int(side_ids[pos]), side_codes[pos]))
+    return out
+
+
+def rebuild_index(mid: MutableIndexBase, *,
+                  min_capacity: int | None = None) -> JunoIndexData:
+    """Re-pack a mutable index's live state into a fresh immutable index.
+
+    Centroids, PQ codebooks and the density model are carried over
+    unchanged (no retraining — inserts were encoded with the existing
+    codebooks, so their codes stay valid); only the padded storage is
+    rewritten: tombstoned slots vanish, side-buffer points land in real
+    slots of their owning cluster, and the flat ``codes``/``labels``/
+    ``points_sq`` arrays grow to cover every id ever assigned (rows of
+    deleted ids keep their last-known values — stale but unreachable,
+    and only ever read by conservative consumers like ``rt.build_grid``
+    reach measurement).
+
+    Parameters
+    ----------
+    mid : MutableIndexBase
+        A :class:`~repro.core.juno.MutableJunoIndex` (or the distributed
+        variant) whose live state to drain.
+    min_capacity : int, optional
+        Floor for the new padded capacity P. Default: keep the current
+        capacity (preserving every jitted search signature) unless the
+        densest cluster no longer fits, in which case P grows to the
+        next multiple of 8 plus one insert-headroom row of 8.
+
+    Returns
+    -------
+    JunoIndexData
+        The rebuilt index; global point ids are preserved, so post-swap
+        searches return the pre-swap (base ⊕ side ⊖ tombstones) results.
+    """
+    data = mid.data
+    point_ids = np.asarray(data.ivf.point_ids)
+    valid = np.asarray(data.ivf.valid)
+    cluster_codes = np.asarray(data.cluster_codes)
+    centroids = np.asarray(data.ivf.centroids)
+    n_clusters, old_cap = point_ids.shape
+    n_sub = cluster_codes.shape[-1]
+
+    per_cluster = live_points(mid, point_ids, valid, cluster_codes)
+    max_fill = max((len(members) for members in per_cluster), default=0)
+    cap = max(old_cap, min_capacity or 0)
+    if max_fill > cap:
+        cap = ((max_fill + 7) // 8) * 8 + 8
+
+    # flat arrays over every id ever assigned (next_id is the watermark)
+    n_old = int(data.codes.shape[0])
+    n_ids = max(n_old, int(mid._next_id))
+    codes_all = np.zeros((n_ids, n_sub), np.uint8)
+    codes_all[:n_old] = np.asarray(data.codes)
+    labels_all = np.zeros((n_ids,), np.int32)
+    labels_all[:n_old] = np.asarray(data.ivf.labels)
+    psq_all = np.zeros((n_ids,), np.float32)
+    psq_all[:n_old] = np.asarray(data.points_sq)
+
+    new_ids = np.full((n_clusters, cap), -1, np.int32)
+    new_codes = np.zeros((n_clusters, cap, n_sub), np.uint8)
+    recon_ids, recon_labels, recon_codes = [], [], []
+    for c, members in enumerate(per_cluster):
+        for slot, (pid, code) in enumerate(members):
+            new_ids[c, slot] = pid
+            new_codes[c, slot] = code
+            codes_all[pid] = code
+            labels_all[pid] = c
+            if pid >= n_old:   # inserted id: |p|^2 must be reconstructed
+                recon_ids.append(pid)
+                recon_labels.append(c)
+                recon_codes.append(code)
+    if recon_ids:
+        psq_all[np.asarray(recon_ids)] = _reconstructed_sq(
+            centroids, data.codebook, np.asarray(recon_labels),
+            np.stack(recon_codes))
+
+    ids_j = jnp.asarray(new_ids)
+    return data._replace(
+        ivf=data.ivf._replace(point_ids=ids_j, valid=ids_j >= 0,
+                              labels=jnp.asarray(labels_all)),
+        codes=jnp.asarray(codes_all),
+        cluster_codes=jnp.asarray(new_codes),
+        points_sq=jnp.asarray(psq_all))

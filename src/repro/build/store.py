@@ -1,0 +1,413 @@
+"""Versioned on-disk index artifacts (`repro.build.store`).
+
+One artifact = one directory holding ``arrays.npz`` (every
+:class:`~repro.core.juno.JunoIndexData` array, flattened with dotted
+keys, plus — when attached — the ``repro.rt`` centroid grid under an
+``rt_grid.`` prefix, so an index and its calibrated spatial filter travel
+together) and ``manifest.json`` (schema version, the full
+:class:`~repro.core.juno.JunoConfig`, its canonical hash, metric,
+N/C/P/S/E shape summary, and a per-array sha256/shape/dtype table for
+integrity verification).
+
+Loads are fail-closed: a schema-version mismatch, a config-hash mismatch
+against the caller's expected config, a missing/extra array, or a
+checksum mismatch all raise :class:`ArtifactError` before any partially
+valid index can reach serving.
+
+:class:`ArtifactStore` layers generation management on top: each ``put``
+writes a fresh ``<root>/<name>/v<NNNN>`` directory (written to a temp
+path, then atomically renamed), so a serving process can keep reading
+``latest`` while the next generation lands — the storage half of the
+zero-downtime rebuild story (``repro.build.rebuild``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.density import DensityModel
+from repro.core.ivf import IVFIndex
+from repro.core.juno import JunoConfig, JunoIndexData
+from repro.core.pq import PQCodebook
+
+#: bump when the on-disk layout changes incompatibly
+SCHEMA_VERSION = 1
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+_RT_PREFIX = "rt_grid."
+
+
+class ArtifactError(RuntimeError):
+    """A persisted index failed validation (version, config hash, integrity)."""
+
+
+class LoadedIndex(NamedTuple):
+    """What :func:`load_index` returns.
+
+    Attributes
+    ----------
+    data : JunoIndexData
+        The reconstructed index (device arrays).
+    config : JunoConfig
+        The build config persisted alongside it.
+    manifest : dict
+        The raw manifest (schema version, hashes, shapes, ``extra``).
+    rt_grid : repro.rt.CentroidGrid or None
+        The folded-in spatial grid, when one was saved.
+    """
+
+    data: JunoIndexData
+    config: JunoConfig
+    manifest: dict
+    rt_grid: object | None
+
+
+def _flatten_index(data: JunoIndexData) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    for group, obj in (("ivf", data.ivf), ("codebook", data.codebook),
+                       ("density", data.density)):
+        for f in type(obj)._fields:
+            out[f"{group}.{f}"] = np.asarray(getattr(obj, f))
+    for f in ("codes", "cluster_codes", "points_sq"):
+        out[f] = np.asarray(getattr(data, f))
+    return out
+
+
+def _unflatten_index(arr: dict[str, np.ndarray]) -> JunoIndexData:
+    pick = lambda g, t: t(**{f: jnp.asarray(arr[f"{g}.{f}"])  # noqa: E731
+                             for f in t._fields})
+    return JunoIndexData(
+        ivf=pick("ivf", IVFIndex), codebook=pick("codebook", PQCodebook),
+        density=pick("density", DensityModel),
+        codes=jnp.asarray(arr["codes"]),
+        cluster_codes=jnp.asarray(arr["cluster_codes"]),
+        points_sq=jnp.asarray(arr["points_sq"]))
+
+
+def config_hash(config: JunoConfig) -> str:
+    """Canonical hash of a :class:`JunoConfig` (sha256 of sorted JSON).
+
+    Parameters
+    ----------
+    config : JunoConfig
+        The build config to fingerprint.
+
+    Returns
+    -------
+    str
+        Hex digest; equal iff every config field is equal.
+    """
+    blob = json.dumps(dataclasses.asdict(config), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _array_digest(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def save_index(path: str, data: JunoIndexData, config: JunoConfig, *,
+               rt_grid=None, extra: dict | None = None) -> dict:
+    """Persist an index (and optionally its rt grid) as one artifact.
+
+    Parameters
+    ----------
+    path : str
+        Target directory (created; existing files are overwritten).
+    data : JunoIndexData
+        The built index.
+    config : JunoConfig
+        The config it was built with (hashed into the manifest;
+        :func:`load_index` can verify against an expected config).
+    rt_grid : repro.rt.CentroidGrid, optional
+        A calibrated spatial grid to fold into the same artifact.
+    extra : dict, optional
+        Caller metadata recorded verbatim in the manifest (e.g. a shard
+        tag from ``pipeline.build_streaming_sharded``).
+
+    Returns
+    -------
+    dict
+        The manifest that was written.
+    """
+    arrays = _flatten_index(data)
+    if rt_grid is not None:
+        for f in type(rt_grid)._fields:
+            arrays[_RT_PREFIX + f] = np.asarray(getattr(rt_grid, f))
+    n, s = data.codes.shape
+    c, p = data.ivf.point_ids.shape
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "config": dataclasses.asdict(config),
+        "config_hash": config_hash(config),
+        "metric": config.metric,
+        "shapes": {"n": int(n), "d": int(data.ivf.centroids.shape[1]),
+                   "c": int(c), "p": int(p), "s": int(s),
+                   "e": int(data.codebook.entries.shape[1])},
+        "rt_grid": rt_grid is not None,
+        "extra": dict(extra or {}),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "sha256": _array_digest(v)}
+                   for k, v in arrays.items()},
+    }
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, _ARRAYS), **arrays)
+    with open(os.path.join(path, _MANIFEST), "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return manifest
+
+
+def _read_manifest(path: str) -> dict:
+    mpath = os.path.join(path, _MANIFEST)
+    if not os.path.exists(mpath):
+        raise ArtifactError(f"no manifest at {mpath}")
+    with open(mpath) as fh:
+        manifest = json.load(fh)
+    ver = manifest.get("schema_version")
+    if ver != SCHEMA_VERSION:
+        raise ArtifactError(
+            f"schema version mismatch: artifact v{ver}, reader "
+            f"v{SCHEMA_VERSION} ({path})")
+    return manifest
+
+
+def _load_arrays(path: str) -> dict[str, np.ndarray]:
+    apath = os.path.join(path, _ARRAYS)
+    if not os.path.exists(apath):
+        raise ArtifactError(f"no array bundle at {apath}")
+    with np.load(apath) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _check_arrays(manifest: dict, arrays: dict[str, np.ndarray],
+                  path: str) -> None:
+    names = set(arrays)
+    listed = set(manifest["arrays"])
+    if names != listed:
+        raise ArtifactError(
+            f"array set mismatch: bundle-only {sorted(names - listed)}, "
+            f"manifest-only {sorted(listed - names)} ({path})")
+    for name, meta in manifest["arrays"].items():
+        a = arrays[name]
+        if list(a.shape) != meta["shape"] or str(a.dtype) != meta["dtype"]:
+            raise ArtifactError(
+                f"{name}: stored {a.shape}/{a.dtype} != manifest "
+                f"{meta['shape']}/{meta['dtype']} ({path})")
+        if _array_digest(a) != meta["sha256"]:
+            raise ArtifactError(f"{name}: checksum mismatch ({path})")
+
+
+def verify_artifact(path: str) -> dict:
+    """Validate an artifact's manifest and array integrity on disk.
+
+    Every array listed in the manifest must exist in ``arrays.npz`` with
+    the recorded shape, dtype and sha256 (and no unlisted arrays may be
+    present).
+
+    Parameters
+    ----------
+    path : str
+        Artifact directory.
+
+    Returns
+    -------
+    dict
+        The validated manifest.
+
+    Raises
+    ------
+    ArtifactError
+        On any missing file, version mismatch, or integrity failure.
+    """
+    manifest = _read_manifest(path)
+    _check_arrays(manifest, _load_arrays(path), path)
+    return manifest
+
+
+def load_index(path: str, *, expect_config: JunoConfig | None = None,
+               verify: bool = True) -> LoadedIndex:
+    """Load a persisted index artifact, fail-closed.
+
+    Parameters
+    ----------
+    path : str
+        Artifact directory written by :func:`save_index`.
+    expect_config : JunoConfig, optional
+        When given, the artifact's config hash must match this config's
+        (guards a serving process against loading an index built with
+        different knobs).
+    verify : bool
+        Run the full :func:`verify_artifact` integrity pass (default).
+        ``False`` skips checksums but still checks schema version and
+        config hash.
+
+    Returns
+    -------
+    LoadedIndex
+        ``(data, config, manifest, rt_grid)``.
+
+    Raises
+    ------
+    ArtifactError
+        On version, config-hash, or integrity mismatch.
+    """
+    manifest = _read_manifest(path)
+    config = JunoConfig(**manifest["config"])
+    if manifest.get("config_hash") != config_hash(config):
+        raise ArtifactError(f"manifest config_hash does not match its own "
+                            f"config ({path})")
+    if expect_config is not None and \
+            config_hash(expect_config) != manifest["config_hash"]:
+        raise ArtifactError(
+            f"config hash mismatch: expected {config_hash(expect_config)}, "
+            f"artifact has {manifest['config_hash']} ({path})")
+    arrays = _load_arrays(path)   # single read: verification hashes the
+    if verify:                    # same in-memory arrays the index is
+        _check_arrays(manifest, arrays, path)  # built from
+    rt_grid = None
+    if manifest.get("rt_grid"):
+        from repro.rt import CentroidGrid
+        rt_grid = CentroidGrid(**{
+            f: jnp.asarray(arrays.pop(_RT_PREFIX + f))
+            for f in CentroidGrid._fields})
+    else:
+        arrays = {k: v for k, v in arrays.items()
+                  if not k.startswith(_RT_PREFIX)}
+    return LoadedIndex(data=_unflatten_index(arrays), config=config,
+                       manifest=manifest, rt_grid=rt_grid)
+
+
+class ArtifactStore:
+    """Directory of named, versioned index artifacts.
+
+    Layout: ``<root>/<name>/v0001``, ``v0002``, … — one
+    :func:`save_index` artifact per generation. Writes land in a temp
+    directory and are renamed into place, so readers of
+    :meth:`latest`/:meth:`get` never observe a half-written generation.
+    """
+
+    def __init__(self, root: str):
+        """Open (creating if needed) the store rooted at ``root``.
+
+        Parameters
+        ----------
+        root : str
+            Store root directory.
+        """
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def path(self, name: str, version: int) -> str:
+        """Directory of one generation of ``name``.
+
+        Parameters
+        ----------
+        name : str
+            Artifact name.
+        version : int
+            Generation number (1-based).
+
+        Returns
+        -------
+        str
+            The artifact directory path (may not exist yet).
+        """
+        return os.path.join(self.root, name, f"v{version:04d}")
+
+    def versions(self, name: str) -> list[int]:
+        """All committed generations of ``name``, ascending.
+
+        Parameters
+        ----------
+        name : str
+            Artifact name.
+
+        Returns
+        -------
+        list of int
+            Generation numbers; empty when the name is unknown.
+        """
+        d = os.path.join(self.root, name)
+        if not os.path.isdir(d):
+            return []
+        out = []
+        for entry in os.listdir(d):
+            if entry.startswith("v") and entry[1:].isdigit() and \
+                    os.path.exists(os.path.join(d, entry, _MANIFEST)):
+                out.append(int(entry[1:]))
+        return sorted(out)
+
+    def latest(self, name: str) -> int | None:
+        """Newest committed generation of ``name`` (None when absent).
+
+        Parameters
+        ----------
+        name : str
+            Artifact name.
+
+        Returns
+        -------
+        int or None
+            The highest generation number, or None.
+        """
+        vs = self.versions(name)
+        return vs[-1] if vs else None
+
+    def put(self, name: str, data: JunoIndexData, config: JunoConfig, *,
+            rt_grid=None, extra: dict | None = None) -> int:
+        """Commit a new generation of ``name`` atomically.
+
+        Parameters
+        ----------
+        name : str
+            Artifact name.
+        data, config, rt_grid, extra
+            Forwarded to :func:`save_index`.
+
+        Returns
+        -------
+        int
+            The committed generation number.
+        """
+        version = (self.latest(name) or 0) + 1
+        final = self.path(name, version)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_index(tmp, data, config, rt_grid=rt_grid, extra=extra)
+        os.makedirs(os.path.dirname(final), exist_ok=True)
+        os.rename(tmp, final)
+        return version
+
+    def get(self, name: str, version: int | None = None, **kw) -> LoadedIndex:
+        """Load one generation of ``name`` (default: the latest).
+
+        Parameters
+        ----------
+        name : str
+            Artifact name.
+        version : int, optional
+            Generation to load (default :meth:`latest`).
+        **kw
+            Forwarded to :func:`load_index` (``expect_config``,
+            ``verify``).
+
+        Returns
+        -------
+        LoadedIndex
+            See :func:`load_index`.
+        """
+        if version is None:
+            version = self.latest(name)
+            if version is None:
+                raise ArtifactError(f"no artifact named {name!r} in "
+                                    f"{self.root}")
+        return load_index(self.path(name, version), **kw)

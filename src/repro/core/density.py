@@ -53,6 +53,72 @@ def build_density_grid(sub_points: jnp.ndarray, grid_size: int = 100
     return grid, lo, hi
 
 
+@jax.jit
+def accumulate_density_counts(counts: jnp.ndarray, sub_points: jnp.ndarray,
+                              lo: jnp.ndarray, hi: jnp.ndarray,
+                              weights: jnp.ndarray | None = None
+                              ) -> jnp.ndarray:
+    """Add one chunk's binned counts to a running (S, G, G) histogram.
+
+    The streaming counterpart of :func:`build_density_grid`: the bounding
+    box is fixed up front (out-of-box points clip to edge cells, exactly
+    as :func:`lookup_density` clips at query time) so chunks can be
+    accumulated independently.
+
+    Parameters
+    ----------
+    counts : jnp.ndarray
+        (S, G, G) f32 running raw counts (start from zeros).
+    sub_points : jnp.ndarray
+        (S, B, M) f32 — one chunk's residual subspace projections.
+    lo, hi : jnp.ndarray
+        (S, M) f32 — fixed binning box per subspace.
+    weights : jnp.ndarray, optional
+        (B,) f32 per-row weight (0.0 excludes a padding row from the
+        histogram; default all-ones).
+
+    Returns
+    -------
+    jnp.ndarray
+        (S, G, G) f32 updated counts.
+    """
+    g = counts.shape[-1]
+    span = jnp.maximum(hi - lo, 1e-6)
+    w = (jnp.ones((sub_points.shape[1],), jnp.float32)
+         if weights is None else weights.astype(jnp.float32))
+
+    def per_sub(cnt, pts, lo_s, span_s):
+        ij = jnp.clip(((pts - lo_s) / span_s * g).astype(jnp.int32),
+                      0, g - 1)
+        flat = ij[:, 0] * g + ij[:, 1]
+        return cnt.reshape(-1).at[flat].add(w).reshape(g, g)
+
+    return jax.vmap(per_sub)(counts, sub_points, lo, span)
+
+
+def density_grid_from_counts(counts: jnp.ndarray, lo: jnp.ndarray,
+                             hi: jnp.ndarray) -> jnp.ndarray:
+    """Finalize streamed raw counts into the log1p density grid.
+
+    Parameters
+    ----------
+    counts : jnp.ndarray
+        (S, G, G) f32 raw counts (:func:`accumulate_density_counts`).
+    lo, hi : jnp.ndarray
+        (S, M) f32 binning box used during accumulation.
+
+    Returns
+    -------
+    jnp.ndarray
+        (S, G, G) f32 — ``log1p(count / cell_area)``, the same quantity
+        :func:`build_density_grid` produces in one shot.
+    """
+    g = counts.shape[-1]
+    span = jnp.maximum(hi - lo, 1e-6)
+    cell_area = (span[:, 0] / g) * (span[:, 1] / g)
+    return jnp.log1p(counts / jnp.maximum(cell_area, 1e-12)[:, None, None])
+
+
 def lookup_density(model: DensityModel, sub_queries: jnp.ndarray) -> jnp.ndarray:
     """sub_queries: (..., S, M) -> densities (..., S)."""
     g = model.grid_size
@@ -95,6 +161,40 @@ def calibrate(sub_points: jnp.ndarray, codebook_entries: jnp.ndarray,
                       caller from ground truth — see JunoIndex.build).
     """
     grid, lo, hi = build_density_grid(sub_points, grid_size)
+    return calibrate_from_grid(grid, lo, hi, sample_queries,
+                               topk_entry_dists, degree=degree)
+
+
+def calibrate_from_grid(grid: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                        sample_queries: jnp.ndarray,
+                        topk_entry_dists: jnp.ndarray, *,
+                        degree: int = 2) -> DensityModel:
+    """Fit the threshold regressor onto an already-built density grid.
+
+    The regression half of :func:`calibrate`, split out so the streaming
+    build (``repro.build.pipeline``) can accumulate the grid chunk by
+    chunk (:func:`accumulate_density_counts`) and still share the exact
+    covering-fit logic of the in-memory path.
+
+    Parameters
+    ----------
+    grid : jnp.ndarray
+        (S, G, G) f32 log1p density grid.
+    lo, hi : jnp.ndarray
+        (S, M) f32 grid bounding box.
+    sample_queries : jnp.ndarray
+        (Qs, S, M) training query projections.
+    topk_entry_dists : jnp.ndarray
+        (Qs, S) covering distances from ground truth (see
+        :func:`calibrate`).
+    degree : int
+        Polynomial degree of the regressor.
+
+    Returns
+    -------
+    DensityModel
+        The complete calibrated model.
+    """
     stub = DensityModel(grid=grid, lo=lo, hi=hi,
                         coeffs=jnp.zeros((degree + 1,), jnp.float32),
                         tau_min=jnp.float32(0.0), tau_max=jnp.float32(1.0))

@@ -34,21 +34,49 @@ class IVFIndex(NamedTuple):
         return self.point_ids.shape[1]
 
 
-def build_ivf(points: jnp.ndarray, *, n_clusters: int, n_iters: int = 10,
-              key: jax.Array | None = None, capacity_mult: float = 4.0) -> IVFIndex:
-    """Train IVF centroids and build the padded cluster layout.
+def cluster_capacity(n: int, n_clusters: int, capacity_mult: float) -> int:
+    """Padded per-cluster slot count: ``capacity_mult * N/C``, min 8, mult of 8.
 
-    ``capacity_mult`` pads each cluster to ``capacity_mult * N/C`` slots;
-    overflowing points (rare with reasonable k-means balance) spill to their
-    second-nearest non-full cluster via a host-side pass.
+    Parameters
+    ----------
+    n : int
+        Number of points.
+    n_clusters : int
+        Number of IVF clusters.
+    capacity_mult : float
+        Padding headroom over the perfectly balanced fill ``N / C``.
+
+    Returns
+    -------
+    int
+        The slot count P shared by every padded cluster row.
     """
-    st: KMeansState = kmeans_subsampled(points, n_clusters=n_clusters,
-                                        n_iters=n_iters, key=key)
-    labels = np.array(assign(points.astype(jnp.float32), st.centroids))
-    n = points.shape[0]
     cap = int(max(8, capacity_mult * n / n_clusters))
-    cap = ((cap + 7) // 8) * 8
+    return ((cap + 7) // 8) * 8
 
+
+def padded_layout(labels: np.ndarray, n_clusters: int, cap: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Pack point ids into the padded (C, P) cluster layout, spilling overflow.
+
+    Overflowing points (rare with reasonable k-means balance) spill to the
+    emptiest non-full clusters via a host-side pass, and their ``labels``
+    entry is rewritten to the adoptive cluster so storage and labels agree.
+
+    Parameters
+    ----------
+    labels : np.ndarray
+        (N,) int — owning cluster per point. Modified in place on spill.
+    n_clusters : int
+        Number of clusters C.
+    cap : int
+        Padded capacity P per cluster (:func:`cluster_capacity`).
+
+    Returns
+    -------
+    tuple of np.ndarray
+        ``(point_ids (C, P) int32 with -1 padding, labels (N,))``.
+    """
     point_ids = np.full((n_clusters, cap), -1, dtype=np.int32)
     fill = np.zeros((n_clusters,), dtype=np.int64)
     overflow = []
@@ -70,7 +98,28 @@ def build_ivf(points: jnp.ndarray, *, n_clusters: int, n_iters: int = 10,
                 oi += 1
             if oi >= len(overflow):
                 break
+    return point_ids, labels
 
+
+def build_ivf(points: jnp.ndarray, *, n_clusters: int, n_iters: int = 10,
+              key: jax.Array | None = None, capacity_mult: float = 4.0,
+              max_train_points: int = 200_000) -> IVFIndex:
+    """Train IVF centroids and build the padded cluster layout.
+
+    ``capacity_mult`` pads each cluster to ``capacity_mult * N/C`` slots;
+    overflowing points (rare with reasonable k-means balance) spill to the
+    emptiest non-full clusters via a host-side pass
+    (:func:`padded_layout`). Lloyd training runs on a
+    ``max_train_points``-row subsample (FAISS-style); the full set is
+    only ever streamed through chunked assignment.
+    """
+    st: KMeansState = kmeans_subsampled(points, n_clusters=n_clusters,
+                                        n_iters=n_iters, key=key,
+                                        max_train_points=max_train_points)
+    labels = np.array(assign(points.astype(jnp.float32), st.centroids))
+    n = points.shape[0]
+    cap = cluster_capacity(n, n_clusters, capacity_mult)
+    point_ids, labels = padded_layout(labels, n_clusters, cap)
     point_ids = jnp.asarray(point_ids)
     return IVFIndex(
         centroids=st.centroids,

@@ -47,6 +47,10 @@ class JunoConfig:
     metric: str = "l2"              # "l2" | "ip"
     kmeans_iters: int = 10
     capacity_mult: float = 4.0
+    # Lloyd training (IVF and PQ) runs on at most this many points
+    # (FAISS-style subsampled training); the full set is only streamed
+    # through chunked assignment/encoding. <= 0 disables subsampling.
+    max_train_points: int = 200_000
     grid_size: int = 64             # density grid G (paper: 100)
     calib_queries: int = 128        # queries used to fit the threshold poly
     calib_topk: int = 100           # "top-100" of the paper
@@ -141,11 +145,19 @@ def build(points: jnp.ndarray, config: JunoConfig,
     n, d = pts.shape
     s = d // config.sub_dim
 
+    t_max = config.max_train_points if config.max_train_points > 0 else n
     ivf = build_ivf(pts, n_clusters=config.n_clusters,
                     n_iters=config.kmeans_iters, key=k_ivf,
-                    capacity_mult=config.capacity_mult)
+                    capacity_mult=config.capacity_mult,
+                    max_train_points=t_max)
     residuals = pts - ivf.centroids[ivf.labels]
-    codebook = train_codebook(residuals, n_entries=config.n_entries,
+    if n > t_max:  # subsampled PQ training: full-set Lloyd is O(N·E) per iter
+        sub_idx = jax.random.choice(jax.random.fold_in(k_pq, 1), n,
+                                    shape=(t_max,), replace=False)
+        train_res = residuals[sub_idx]
+    else:
+        train_res = residuals
+    codebook = train_codebook(train_res, n_entries=config.n_entries,
                               m=config.sub_dim, n_iters=config.kmeans_iters,
                               key=k_pq)
     codes = encode(residuals, codebook)                          # (N, S)
@@ -160,6 +172,41 @@ def build(points: jnp.ndarray, config: JunoConfig,
                          points_sq=jnp.sum(pts * pts, axis=-1))
 
 
+def _calib_query_subspaces(queries, ivf, config):
+    """Query-side subspace projections in the geometry the mask uses.
+
+    For l2 the projection is the probe-0 residual (DESIGN.md §2); for ip
+    the raw query. Returns (Qs, S, M) f32. Shared by the in-memory
+    calibration below and the streaming pipeline (``repro.build``).
+    """
+    _, c1 = filter_clusters(queries, ivf, nprobe=1, metric=config.metric)
+    if config.metric == "l2":
+        qres = queries - ivf.centroids[c1[:, 0]]
+        return split_subspaces(qres, config.sub_dim)             # (Qs, S, M)
+    return split_subspaces(queries, config.sub_dim)
+
+
+def _calib_tau_needed(qsub, gt_codes, codebook, metric):
+    """Per-subspace threshold containing every top-k entry (paper §4.1).
+
+    qsub (Qs, S, M), gt_codes (Qs, K, S) int32 — the PQ codes of each
+    calibration query's exact top-k. Returns (Qs, S) f32: the transformed
+    distance from the query's subspace projection that covers all K
+    ground-truth entries. Shared by :func:`build` and ``repro.build``.
+    """
+    ent = codebook.entries                                       # (S, E, M)
+    s_idx = jnp.arange(ent.shape[0])[None, None, :]
+    gt_entries = ent[s_idx, gt_codes]                            # (Qs, K, S, M)
+    if metric == "l2":
+        diff = gt_entries - qsub[:, None, :, :]
+        t = jnp.sum(diff * diff, axis=-1)                        # (Qs, K, S)
+        return jnp.sqrt(jnp.max(t, axis=1))                      # (Qs, S)
+    e_sq = jnp.sum(gt_entries * gt_entries, -1)
+    dot = jnp.sum(gt_entries * qsub[:, None], -1)
+    t = e_sq - 2.0 * dot
+    return jnp.sqrt(jnp.maximum(jnp.max(t, axis=1), 0.0))
+
+
 def _calibrate_density(pts, residuals, codebook, codes, ivf, config, key):
     """Fit density → threshold polynomial from ground-truth top-k (paper §4.1)."""
     n = pts.shape[0]
@@ -172,28 +219,9 @@ def _calibrate_density(pts, residuals, codebook, codes, ivf, config, key):
 
     _, gt_ids = exact_topk(queries, pts, k=config.calib_topk,
                            metric=config.metric, chunk=min(65536, n))
-    # query-side projections in the geometry the mask uses (DESIGN.md §2)
-    _, c1 = filter_clusters(queries, ivf, nprobe=1, metric=config.metric)
-    if config.metric == "l2":
-        qres = queries - ivf.centroids[c1[:, 0]]
-        qsub = split_subspaces(qres, config.sub_dim)             # (Qs, S, M)
-    else:
-        qsub = split_subspaces(queries, config.sub_dim)
-
-    # per-subspace transformed distance from query proj to each top-k entry
+    qsub = _calib_query_subspaces(queries, ivf, config)
     gt_codes = codes[gt_ids].astype(jnp.int32)                   # (Qs, K, S)
-    ent = codebook.entries                                       # (S, E, M)
-    s_idx = jnp.arange(ent.shape[0])[None, None, :]
-    gt_entries = ent[s_idx, gt_codes]                            # (Qs, K, S, M)
-    diff = gt_entries - qsub[:, None, :, :]
-    if config.metric == "l2":
-        t = jnp.sum(diff * diff, axis=-1)                        # (Qs, K, S)
-        tau_needed = jnp.sqrt(jnp.max(t, axis=1))                # (Qs, S)
-    else:
-        e_sq = jnp.sum(gt_entries * gt_entries, -1)
-        dot = jnp.sum(gt_entries * qsub[:, None], -1)
-        t = e_sq - 2.0 * dot
-        tau_needed = jnp.sqrt(jnp.maximum(jnp.max(t, axis=1), 0.0))
+    tau_needed = _calib_tau_needed(qsub, gt_codes, codebook, config.metric)
 
     sub_pts = jnp.swapaxes(split_subspaces(residuals, config.sub_dim), 0, 1)
     return density_lib.calibrate(sub_pts, codebook.entries, qsub, tau_needed,
@@ -803,6 +831,41 @@ class MutableJunoIndex(MutableIndexBase):
 
     def _labels_codes(self, pts):
         return _label_encode(pts, self.data.ivf.centroids, self.data.codebook)
+
+    # ---- hot swap --------------------------------------------------------
+    def swap_data(self, new_data: JunoIndexData, *,
+                  side_capacity: int | None = None) -> None:
+        """Atomically install a rebuilt :class:`JunoIndexData`.
+
+        The new index replaces the served one in a single assignment, the
+        slot bookkeeping (free lists, id → location map) is rederived from
+        its ``point_ids``/``valid`` arrays, the side buffer is reset to
+        empty (a rebuild drains it into proper cluster slots — see
+        ``repro.build.rebuild``), and the id counter is preserved so ids
+        never repeat across generations. Any attached rt grid is dropped;
+        it is rebuilt lazily on the next ``prefilter="rt"`` search
+        (:meth:`ensure_rt_grid`).
+
+        Parameters
+        ----------
+        new_data : JunoIndexData
+            The replacement index. Point ids must already be global (a
+            rebuild keeps them; see ``repro.build.rebuild.rebuild_index``).
+        side_capacity : int, optional
+            Capacity of the fresh side buffer (default: keep the current
+            buffer's capacity).
+        """
+        first_new = max(
+            self._next_id,
+            int(np.asarray(new_data.ivf.point_ids).max(initial=-1)) + 1)
+        self.data = new_data
+        self.rt_grid = None
+        self._init_bookkeeping(
+            new_data.ivf.valid, new_data.ivf.point_ids,
+            side_capacity=(self.side.capacity if side_capacity is None
+                           else side_capacity),
+            first_new_id=first_new,
+            n_subspaces=int(new_data.codes.shape[1]))
 
     # ---- RT prefilter grid ----------------------------------------------
     def ensure_rt_grid(self, *, metric: str = "l2", **kw):

@@ -22,6 +22,35 @@ def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, n - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
 
 
+def _reseed_indices(i: jnp.ndarray | int, n: int, n_clusters: int) -> jnp.ndarray:
+    """Deterministic reseed targets for dead clusters at Lloyd iteration ``i``.
+
+    The map ``j -> (base_i + j) % n`` is injective over cluster positions
+    ``j`` whenever ``n_clusters <= n``, so two dead clusters can never be
+    reseeded to the same data point. (The previous scheme,
+    ``(init_idx * (i + 2) + 7) % n``, collided whenever two init indices
+    coincided mod ``n / gcd(i + 2, n)`` — e.g. ``init_idx`` 1 and 5 with
+    ``n = 12`` at iteration 1 both reseeded to point 10.)
+
+    Parameters
+    ----------
+    i : int or jnp.ndarray
+        Lloyd iteration counter (traced inside ``fori_loop``).
+    n : int
+        Number of data points.
+    n_clusters : int
+        Number of clusters (one candidate index per cluster is returned).
+
+    Returns
+    -------
+    jnp.ndarray
+        (n_clusters,) int32 indices into the point set, pairwise distinct
+        when ``n_clusters <= n``.
+    """
+    base = (7919 * (i + 2) + 7) % n
+    return ((base + jnp.arange(n_clusters)) % n).astype(jnp.int32)
+
+
 def assign(points: jnp.ndarray, centroids: jnp.ndarray, *, chunk: int = 16384) -> jnp.ndarray:
     """Nearest-centroid id per point, O(chunk*C) memory. Returns (N,) int32."""
     n = points.shape[0]
@@ -79,8 +108,9 @@ def kmeans(points: jnp.ndarray, *, n_clusters: int, n_iters: int = 10,
         labels = assign(pts32, centroids, chunk=chunk)
         sums, counts = _update_chunked(pts32, labels, n_clusters, chunk)
         new = sums / jnp.maximum(counts, 1.0)[:, None]
-        # dead clusters: re-seed pseudo-randomly from the data (deterministic)
-        reseed = pts32[(init_idx * (i + 2) + 7) % n]
+        # dead clusters: re-seed deterministically from the data, with
+        # pairwise-distinct targets (see _reseed_indices)
+        reseed = pts32[_reseed_indices(i, n, n_clusters)]
         new = jnp.where((counts > 0)[:, None], new, reseed)
         return new, counts
 

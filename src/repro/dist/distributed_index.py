@@ -202,6 +202,30 @@ def make_distributed_insert(mesh: Mesh):
     return jax.jit(apply, out_shardings=out_sh)
 
 
+def make_distributed_row_update(mesh: Mesh):
+    """Jitted whole-row scatter ``apply(idx, clusters, ids, valid, codes)``.
+
+    The rebuild counterpart of :func:`make_distributed_insert`: instead of
+    touching single (cluster, slot) cells it replaces ENTIRE padded rows
+    (point ids, valid mask and PQ codes) of the given clusters — XLA
+    routes each row to the shard owning it, so a per-shard rebuild is one
+    scatter with no resharding and no shape change.
+    """
+    specs = index_pspecs(mesh)
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def apply(idx: JunoIndexData, clusters, row_ids, row_valid, row_codes):
+        ivf = idx.ivf._replace(
+            point_ids=idx.ivf.point_ids.at[clusters].set(row_ids),
+            valid=idx.ivf.valid.at[clusters].set(row_valid))
+        return idx._replace(
+            ivf=ivf,
+            cluster_codes=idx.cluster_codes.at[clusters].set(row_codes))
+
+    return jax.jit(apply, out_shardings=out_sh)
+
+
 def make_distributed_delete(mesh: Mesh):
     """Jitted ``apply(idx, clusters, slots) -> idx`` tombstone scatter."""
     specs = index_pspecs(mesh)
@@ -243,10 +267,12 @@ class DistributedMutableIndex(MutableIndexBase):
         assert n_clusters % n_shards == 0, \
             f"clusters ({n_clusters}) must divide evenly over {n_shards} shards"
         self.mesh = mesh
+        self.n_shards = n_shards
         self.data = shard_index(idx, mesh)
         self.rt_grid = rt_grid
         self._insert_fn = make_distributed_insert(mesh)
         self._delete_fn = make_distributed_delete(mesh)
+        self._row_update_fn = make_distributed_row_update(mesh)
         # replicated small arrays for insert-time encoding
         self._centroids = idx.ivf.centroids
         self._codebook = idx.codebook
@@ -274,3 +300,129 @@ class DistributedMutableIndex(MutableIndexBase):
         """Side-aware distributed search callable for this index's mesh."""
         return make_distributed_search(self.mesh, local_nprobe, k,
                                        with_side=True, **kw)
+
+    # ---- rebuild / hot swap ---------------------------------------------
+    def swap_data(self, new_data: JunoIndexData, *,
+                  side_capacity: int | None = None) -> None:
+        """Atomically install a rebuilt global index on this mesh.
+
+        The distributed counterpart of
+        :meth:`repro.core.MutableJunoIndex.swap_data`: the new index is
+        cluster-sharded onto the mesh, slot bookkeeping is rederived
+        from its ``point_ids``/``valid``, the side buffer resets to
+        empty, the id watermark is preserved, and any attached rt grid
+        is dropped (rebuild it from the new index when serving
+        ``prefilter="rt"``). A capacity change retraces the jitted
+        search/update programs on first use; an unchanged capacity
+        keeps them warm.
+
+        Parameters
+        ----------
+        new_data : JunoIndexData
+            Replacement GLOBAL (unsharded) index; ``n_clusters`` must
+            still divide over the mesh and point ids must be global.
+        side_capacity : int, optional
+            Capacity of the fresh side buffer (default: keep current).
+        """
+        first_new = max(
+            self._next_id,
+            int(np.asarray(new_data.ivf.point_ids).max(initial=-1)) + 1)
+        self.data = shard_index(new_data, self.mesh)
+        self.rt_grid = None
+        self._centroids = new_data.ivf.centroids
+        self._codebook = new_data.codebook
+        self._init_bookkeeping(
+            new_data.ivf.valid, new_data.ivf.point_ids,
+            side_capacity=(self.side.capacity if side_capacity is None
+                           else side_capacity),
+            first_new_id=first_new,
+            n_subspaces=int(new_data.codes.shape[1]))
+
+    def rebuild_shard(self, shard: int) -> int:
+        """Re-pack one cluster shard in place: drop tombstones, drain side.
+
+        For every cluster owned by ``shard``, live in-cluster points are
+        compacted to the front of their padded row (slot order preserved)
+        and side-buffer points owned by those clusters are re-encoded
+        into the freed slots (buffer order). The padded capacity is FIXED
+        here — the (C, P) array shape is shared across shards — so
+        spills that do not fit stay in the buffer; :meth:`rebuild`
+        escalates those to a capacity-growing full swap. The whole shard
+        lands on the device in ONE routed row scatter
+        (:func:`make_distributed_row_update`), so the other shards — and
+        every jitted search signature — are untouched while this shard
+        rebuilds. Search results are unchanged by construction: a side
+        point was already scored exactly like the in-cluster sibling it
+        becomes.
+
+        Parameters
+        ----------
+        shard : int
+            Shard position in ``[0, n_shards)`` (clusters
+            ``[shard*C/n, (shard+1)*C/n)``).
+
+        Returns
+        -------
+        int
+            Side-buffer points drained into this shard's clusters.
+        """
+        from repro.build.rebuild import live_points
+
+        n_clusters = self.data.ivf.point_ids.shape[0]
+        cl = n_clusters // self.n_shards
+        lo, hi = shard * cl, (shard + 1) * cl
+        point_ids = np.asarray(self.data.ivf.point_ids)
+        valid = np.asarray(self.data.ivf.valid)
+        cluster_codes = np.asarray(self.data.cluster_codes)
+        cap = point_ids.shape[1]
+        n_sub = cluster_codes.shape[-1]
+
+        members = live_points(self, point_ids, valid, cluster_codes,
+                              clusters=range(lo, hi))
+        row_ids = np.full((cl, cap), -1, np.int32)
+        row_codes = np.zeros((cl, cap, n_sub), np.uint8)
+        for c in range(lo, hi):
+            packed = members[c][:cap]      # overflow spills stay in side
+            for slot, (pid, code) in enumerate(packed):
+                row_ids[c - lo, slot] = pid
+                row_codes[c - lo, slot] = code
+                self._loc[pid] = (c, slot)
+            self._free[c] = list(range(len(packed), cap))[::-1]
+        # a side id that now has an in-cluster location frees its buffer slot
+        side_ids = np.asarray(self.side.ids)
+        side_valid = np.asarray(self.side.valid)
+        freed_pos = [int(pos) for pos in np.where(side_valid)[0]
+                     if self._loc.get(int(side_ids[pos]), (-1, -1))[0] >= 0]
+        if freed_pos:
+            pos_j = jnp.asarray(freed_pos)
+            self.side = self.side._replace(
+                valid=self.side.valid.at[pos_j].set(False))
+            self._side_free.extend(freed_pos)
+        self.data = self._row_update_fn(
+            self.data, np.arange(lo, hi, dtype=np.int32), row_ids,
+            row_ids >= 0, row_codes)
+        return len(freed_pos)
+
+    def rebuild(self) -> int:
+        """Drain the side buffer: per-shard repacks, then grow if stuck.
+
+        Rebuilds every shard in sequence (:meth:`rebuild_shard` — cheap,
+        fixed capacity, jit signatures stay warm). Spills whose owning
+        cluster is still full afterwards cannot fit the fixed padded
+        capacity, so they escalate to a full
+        ``repro.build.rebuild.rebuild_index`` + :meth:`swap_data` —
+        capacity grows and the buffer always ends empty, matching the
+        single-device ``AnnServeEngine.compact()`` guarantee.
+
+        Returns
+        -------
+        int
+            Total side-buffer points drained (per-shard + escalation).
+        """
+        drained = sum(self.rebuild_shard(s) for s in range(self.n_shards))
+        stuck = self.side_fill
+        if stuck:
+            from repro.build.rebuild import rebuild_index
+            self.swap_data(rebuild_index(self))
+            drained += stuck
+        return drained

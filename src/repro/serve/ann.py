@@ -158,9 +158,12 @@ class AnnServeEngine:
         self.queue: collections.deque[AnnRequest] = collections.deque()
         self.completed: list[AnnRequest] = []
         self._rid = 0
+        #: bumped by every swap_index(); search results served after a
+        #: bump come from the new index generation
+        self.generation = 0
         self.stats = {"queries": 0, "requests": 0, "ticks": 0,
                       "padded_rows": 0, "inserts": 0, "deletes": 0,
-                      "signatures": collections.Counter()}
+                      "swaps": 0, "signatures": collections.Counter()}
 
     # ---- request plane ---------------------------------------------------
     def submit(self, queries, *, k: int = 10, mode: str = "auto",
@@ -230,7 +233,8 @@ class AnnServeEngine:
         if self.prefilter == "rt":
             if req.rt_probes < 0:
                 from repro import rt as rt_lib
-                grid = self.index.rt_grid
+                # rebuilt lazily after swap_index() dropped it
+                grid = self.index.ensure_rt_grid(metric=self.metric)
                 if self._rt_state is None or self._rt_state[0] is not grid:
                     # inserts replace the grid object (update_radii), so
                     # identity is the cache key for the host routing state
@@ -308,7 +312,8 @@ class AnnServeEngine:
         """Run one padded batch through the jitted search for its mode."""
         rt_kw = {}
         if self.prefilter == "rt":
-            rt_kw = dict(prefilter="rt", rt_grid=self.index.rt_grid,
+            rt_kw = dict(prefilter="rt",
+                         rt_grid=self.index.ensure_rt_grid(metric=self.metric),
                          rt_scale=self.rt_scale)
         if mode == "H2":
             return _search_batch_two_stage(
@@ -353,12 +358,74 @@ class AnnServeEngine:
         self.stats["deletes"] += n
         return n
 
-    def compact(self) -> int:
-        """Fold side-buffer spills back into freed cluster slots.
+    def compact(self, *, rebuild: bool | str = "auto") -> int:
+        """Drain side-buffer spills back into proper cluster slots.
 
-        A search no-op by construction; returns how many points moved.
+        First folds spills into already-free slots (the cheap path — a
+        search no-op by construction). With ``rebuild="auto"`` (default),
+        any spills that remain stuck — their cluster has no free slot —
+        trigger a full :meth:`swap_index` rebuild, which re-packs every
+        cluster (dropping tombstones, growing capacity if needed) so the
+        side buffer always ends empty; ``rebuild=True`` forces the
+        rebuild, ``rebuild=False`` restores the old fold-only behavior.
+
+        Parameters
+        ----------
+        rebuild : bool or "auto"
+            Rebuild policy for stuck spills (see above).
+
+        Returns
+        -------
+        int
+            Total points moved out of the side buffer.
         """
-        return self.index.compact()
+        moved = self.index.compact()
+        stuck = self.index.side_fill
+        if rebuild is True or (rebuild == "auto" and stuck):
+            self.swap_index()
+            moved += stuck
+        return moved
+
+    def swap_index(self, new_data=None) -> int:
+        """Atomically install a rebuilt index — zero-downtime hot swap.
+
+        Runs on the control path between ticks: requests completed
+        before the call were served by the old generation, anything
+        still queued (and everything after) is served by the new one,
+        and no request ever observes a half-installed index. With the
+        default rebuild, the side buffer is drained into the new index
+        (spills re-encoded into proper cluster slots), tombstones are
+        dropped, and results are preserved; the rt grid and router
+        state are invalidated and rebuilt lazily, and the jitted search
+        signatures stay warm whenever the rebuild kept the padded
+        capacity unchanged.
+
+        Parameters
+        ----------
+        new_data : JunoIndexData, optional
+            The replacement index. Default: rebuild from the live state
+            (``repro.build.rebuild.rebuild_index``), which preserves
+            every live point. A caller-supplied index (e.g. loaded from
+            a ``repro.build.store`` artifact) REPLACES the serving
+            state wholesale: the side buffer and bookkeeping are reset
+            to exactly what ``new_data`` contains, so any live
+            mutations not already reflected in it are discarded — the
+            caller owns that consistency (rebuild into the artifact
+            first, or replay the mutation log after the swap).
+
+        Returns
+        -------
+        int
+            The new generation number.
+        """
+        if new_data is None:
+            from repro.build.rebuild import rebuild_index
+            new_data = rebuild_index(self.index)
+        self.index.swap_data(new_data)
+        self._rt_state = None    # routing snapshot belongs to the old grid
+        self.generation += 1
+        self.stats["swaps"] += 1
+        return self.generation
 
     # ---- observability ---------------------------------------------------
     def latency_stats(self) -> dict:

@@ -1,0 +1,485 @@
+"""`repro.build`: streaming construction, artifact store, rebuild/hot-swap.
+
+Covers the subsystem's three contracts:
+
+* **pipeline** — `build_streaming` matches the in-memory `core.build` on
+  the same data/key (identical shapes/dtypes; H-tier recall within 0.01)
+  while the raw point set is only ever resident one chunk at a time
+  (asserted structurally via the `BuildProbe`, not RSS), and the sharded
+  variant round-trips through `split_shards`/`merge_shards`.
+* **store** — save/load round-trip preserves every array bit-for-bit
+  (hypothesis over shapes/metrics), the rt grid folds into the same
+  artifact, and schema-version / config-hash / integrity mismatches all
+  raise `ArtifactError` before an index can reach serving.
+* **rebuild** — after spills + tombstones, `rebuild_index` +
+  `AnnServeEngine.swap_index` return the pre-swap (base ⊕ side ⊖
+  tombstones) search results (scores bit-identical; ids identical at
+  every non-boundary score level — the compact() invariant), the side
+  buffer drains completely, serving continues across the swap under
+  query/insert interleaving, and the distributed per-shard rebuild holds
+  the same parity on a 1-device mesh.
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.build import (ArtifactError, ArtifactStore, BuildProbe,
+                         array_source, build_streaming,
+                         build_streaming_sharded, config_hash, load_index,
+                         merge_shards, rebuild_index, save_index,
+                         split_shards)
+from repro.core import (JunoConfig, MutableJunoIndex, build, exact_topk,
+                        recall_n_at_k, search)
+from repro.data import DEEP_LIKE, TTI_LIKE, make_dataset
+from repro.serve.ann import AnnServeEngine
+
+
+@pytest.fixture(scope="module")
+def base():
+    pts, q = make_dataset(DEEP_LIKE, 6000, 32, key=jax.random.PRNGKey(3))
+    cfg = JunoConfig(n_clusters=16, n_entries=16, calib_queries=12,
+                     kmeans_iters=4, capacity_mult=1.1)
+    return np.asarray(pts), np.asarray(q), cfg, build(pts, cfg)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: streaming vs in-memory
+# ---------------------------------------------------------------------------
+
+def test_streaming_matches_inmemory_build(base):
+    """Same data/key: identical shapes/dtypes everywhere, recall@10 within
+    0.01 of the in-memory build, and the chunk probe proves the memory
+    bound (every consumed chunk within budget, both passes chunked)."""
+    pts, q, cfg, idx = base
+    chunk = 1024
+    probe = BuildProbe()
+    sidx = build_streaming(array_source(pts, chunk), cfg, probe=probe)
+
+    # memory bound, structurally: the pipeline consumed the set as chunks
+    # within budget on EVERY pass (2, plus a 3rd targeted pass when the
+    # tight capacity_mult forces overflow spill) and sampled at most
+    # max_train_points rows
+    n = pts.shape[0]
+    assert probe.max_chunk_rows <= chunk
+    assert probe.passes in (2, 3)
+    assert probe.chunks == probe.passes * -(-n // chunk)
+    assert probe.n_points == n
+    assert probe.train_rows <= max(cfg.max_train_points, n)
+
+    flat_m = jax.tree_util.tree_leaves(idx)
+    flat_s = jax.tree_util.tree_leaves(sidx)
+    assert len(flat_m) == len(flat_s)
+    for a, b in zip(flat_m, flat_s):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+    _, gt = exact_topk(jnp.asarray(q), jnp.asarray(pts), k=10)
+    recalls = {}
+    for tag, ix in [("mem", idx), ("stream", sidx)]:
+        _, ids = search(ix, q, nprobe=8, k=10, mode="H")
+        recalls[tag] = float(recall_n_at_k(ids, gt))
+    assert recalls["stream"] >= recalls["mem"] - 0.01, recalls
+
+
+def test_streaming_subsampled_training_stays_bounded():
+    """max_train_points < N: the reservoir (not the set) bounds training
+    residency and the index still searches at a sane recall."""
+    pts, q = make_dataset(DEEP_LIKE, 5000, 16, key=jax.random.PRNGKey(8))
+    pts, q = np.asarray(pts), np.asarray(q)
+    cfg = JunoConfig(n_clusters=16, n_entries=16, calib_queries=8,
+                     kmeans_iters=3, max_train_points=2000)
+    probe = BuildProbe()
+    sidx = build_streaming(array_source(pts, 512), cfg, probe=probe)
+    assert probe.train_rows == 2000
+    assert probe.max_chunk_rows <= 512
+    _, gt = exact_topk(jnp.asarray(q), jnp.asarray(pts), k=10)
+    _, ids = search(sidx, q, nprobe=8, k=10, mode="H")
+    assert float(recall_n_at_k(ids, gt)) > 0.3
+
+
+def test_sharded_streaming_split_merge_roundtrip(base):
+    """Per-shard parts carry exactly the rows dist would own; merging
+    them reproduces the unsharded streaming build bit-for-bit."""
+    pts, _, cfg, _ = base
+    key = jax.random.PRNGKey(0)
+    whole = build_streaming(array_source(pts, 2048), cfg, key=key)
+    parts = build_streaming_sharded(array_source(pts, 2048), cfg, 4, key=key)
+    assert len(parts) == 4
+    cl = whole.ivf.centroids.shape[0] // 4
+    for i, part in enumerate(parts):
+        assert part.ivf.centroids.shape[0] == cl
+        np.testing.assert_array_equal(
+            np.asarray(part.ivf.point_ids),
+            np.asarray(whole.ivf.point_ids[i * cl:(i + 1) * cl]))
+    merged = merge_shards(parts)
+    for a, b in zip(jax.tree_util.tree_leaves(whole),
+                    jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_shards_rejects_uneven(base):
+    _, _, _, idx = base
+    with pytest.raises(ValueError):
+        split_shards(idx, 5)   # 16 clusters do not divide over 5 shards
+
+
+def test_streaming_rejects_unstable_source(base):
+    """A one-shot generator (exhausted on pass 2) must fail loudly, not
+    silently build an empty index."""
+    pts, _, cfg, _ = base
+
+    one_shot = iter([pts[:2048], pts[2048:]])
+    with pytest.raises(ValueError):
+        build_streaming(one_shot, cfg)
+
+
+# ---------------------------------------------------------------------------
+# store: round-trip + fail-closed validation
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _tiny_index(n_clusters: int, n_entries: int, metric: str, dim: int):
+    spec = DEEP_LIKE if metric == "l2" else TTI_LIKE
+    spec = type(spec)(spec.name, dim, metric, n_modes=8)
+    pts, _ = make_dataset(spec, 400, 4, key=jax.random.PRNGKey(n_clusters))
+    cfg = JunoConfig(n_clusters=n_clusters, n_entries=n_entries,
+                     metric=metric, calib_queries=6, kmeans_iters=2,
+                     grid_size=8)
+    return build(pts, cfg), cfg
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.sampled_from([4, 8]), st.sampled_from([8, 16]),
+       st.sampled_from(["l2", "ip"]), st.sampled_from([8, 16]))
+def test_store_roundtrip_bit_exact(n_clusters, n_entries, metric, dim):
+    """save/load preserves every array bit-for-bit across shapes/metrics.
+
+    (No pytest fixtures here: hypothesis-wrapped tests can't take them —
+    tempfile stands in for tmp_path.)
+    """
+    import tempfile
+    idx, cfg = _tiny_index(n_clusters, n_entries, metric, dim)
+    with tempfile.TemporaryDirectory() as d:
+        _roundtrip(os.path.join(d, "art"), idx, cfg)
+
+
+def _roundtrip(path, idx, cfg):
+    manifest = save_index(path, idx, cfg)
+    assert manifest["shapes"]["c"] == cfg.n_clusters
+    loaded = load_index(path, expect_config=cfg)
+    assert loaded.rt_grid is None
+    assert loaded.config == cfg
+    for a, b in zip(jax.tree_util.tree_leaves(idx),
+                    jax.tree_util.tree_leaves(loaded.data)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_store_folds_rt_grid(base, tmp_path):
+    """An index and its calibrated rt grid travel as ONE artifact."""
+    from repro import rt as rt_lib
+    pts, _, cfg, idx = base
+    grid = rt_lib.build_grid(idx, metric="l2", calib_queries=8,
+                             points=pts)
+    path = str(tmp_path / "with_grid")
+    save_index(path, idx, cfg, rt_grid=grid, extra={"shard": 0})
+    loaded = load_index(path)
+    assert loaded.manifest["extra"] == {"shard": 0}
+    assert loaded.rt_grid is not None
+    for a, b in zip(jax.tree_util.tree_leaves(grid),
+                    jax.tree_util.tree_leaves(loaded.rt_grid)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_store_version_and_hash_mismatch_raise(base, tmp_path):
+    import json
+    pts, _, cfg, idx = base
+    path = str(tmp_path / "art")
+    save_index(path, idx, cfg)
+
+    # wrong expected config -> config-hash mismatch
+    other = JunoConfig(n_clusters=8)
+    assert config_hash(other) != config_hash(cfg)
+    with pytest.raises(ArtifactError, match="config hash"):
+        load_index(path, expect_config=other)
+
+    # corrupted array bytes -> integrity failure
+    import numpy as _np
+    apath = os.path.join(path, "arrays.npz")
+    with _np.load(apath) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["codes"][0, 0] ^= 1
+    _np.savez(apath, **arrays)
+    with pytest.raises(ArtifactError, match="checksum"):
+        load_index(path)
+    _np.savez(apath, **{k: v for k, v in arrays.items() if k != "codes"})
+    with pytest.raises(ArtifactError, match="array set"):
+        load_index(path)
+
+    # future schema version -> fail closed (checked before anything else)
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["schema_version"] = 999
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(ArtifactError, match="schema version"):
+        load_index(path)
+
+
+def test_artifact_store_versions_and_latest(base, tmp_path):
+    pts, _, cfg, idx = base
+    store = ArtifactStore(str(tmp_path / "store"))
+    assert store.latest("main") is None
+    with pytest.raises(ArtifactError):
+        store.get("main")
+    v1 = store.put("main", idx, cfg)
+    v2 = store.put("main", idx, cfg)
+    assert (v1, v2) == (1, 2)
+    assert store.versions("main") == [1, 2]
+    loaded = store.get("main", expect_config=cfg)
+    np.testing.assert_array_equal(np.asarray(loaded.data.codes),
+                                  np.asarray(idx.codes))
+    old = store.get("main", version=1)
+    assert old.manifest["config_hash"] == config_hash(cfg)
+
+
+# ---------------------------------------------------------------------------
+# rebuild + hot swap
+# ---------------------------------------------------------------------------
+
+def _spill_and_tombstone(eng, idx, pts, rng, n_extra=4):
+    """Overfill the tightest cluster (forcing side spills) and tombstone
+    two of its original members. Returns the inserted rows and ids."""
+    mid = eng.index
+    n_clusters = mid.data.ivf.point_ids.shape[0]
+    free = [mid.free_slots(c) for c in range(n_clusters)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + n_extra, cent.shape[0]))).astype(np.float32)
+    ids = eng.insert(newpts)
+    assert mid.side_fill >= n_extra
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:2]
+    eng.delete(victims)
+    return newpts, ids, victims
+
+
+def _assert_same_results(s0, i0, s1, i1):
+    """Scores bit-identical; id sets identical at every non-boundary score
+    level (the only freedom is lax.top_k's index-order tie-break among
+    exactly equal scores — rebuild changes flat positions)."""
+    np.testing.assert_array_equal(s0, s1)
+    for r in range(s0.shape[0]):
+        boundary = s0[r, -1]
+        for v in np.unique(s0[r][s0[r] != boundary]):
+            assert set(i0[r][s0[r] == v]) == set(i1[r][s1[r] == v]), (r, v)
+
+
+@pytest.mark.parametrize("mode", ["H", "H2", "M"])
+def test_rebuild_swap_id_parity(base, mode):
+    """Post-swap search == pre-swap (base ⊕ side ⊖ tombstones) search."""
+    pts, q, cfg, idx = base
+    eng = AnnServeEngine(idx, side_capacity=64)
+    rng = np.random.default_rng(11)
+    newpts, ids, _ = _spill_and_tombstone(eng, idx, pts, rng)
+
+    qq = np.concatenate([q[:16], newpts[:2]], axis=0)
+    r0 = eng.submit(qq, k=20, mode=mode)
+    eng.run()
+    gen = eng.swap_index()
+    assert gen == 1 and eng.index.side_fill == 0
+    r1 = eng.submit(qq, k=20, mode=mode)
+    eng.run()
+    _assert_same_results(r0.scores, r0.ids, r1.scores, r1.ids)
+
+
+def test_rebuild_swap_under_query_insert_interleaving(base):
+    """Serving continues across generations: query waves interleave with
+    inserts and TWO hot swaps; every inserted point stays retrievable,
+    every pre-swap result is reproduced post-swap, ids never repeat."""
+    pts, q, cfg, idx = base
+    eng = AnnServeEngine(idx, side_capacity=64)
+    rng = np.random.default_rng(13)
+    all_ids = []
+    for wave in range(2):
+        newpts, ids, _ = _spill_and_tombstone(eng, idx, pts, rng)
+        all_ids.extend(ids)
+        qq = np.concatenate([q[8 * wave:8 * wave + 8], newpts[:2]], axis=0)
+        r0 = eng.submit(qq, k=20, mode="H")
+        eng.run()
+        assert eng.swap_index() == wave + 1
+        assert eng.index.side_fill == 0
+        # compact() is no longer a no-op: the buffer is empty, and a fresh
+        # insert lands in a REAL cluster slot of the rebuilt index
+        assert eng.compact() == 0
+        r1 = eng.submit(qq, k=20, mode="H")
+        eng.run()
+        _assert_same_results(r0.scores, r0.ids, r1.scores, r1.ids)
+        # inserted points remain retrievable in the new generation
+        req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+        eng.run()
+        assert all(ids[j] in req.ids[j] for j in range(len(ids)))
+    assert len(set(all_ids)) == len(all_ids), "ids repeated across swaps"
+
+
+def test_compact_rebuilds_stuck_spills(base):
+    """compact() drains spills whose cluster has NO free slot (the case
+    the old fold-only compact could never resolve) by rebuilding."""
+    pts, q, cfg, idx = base
+    eng = AnnServeEngine(idx, side_capacity=64)
+    rng = np.random.default_rng(17)
+    mid = eng.index
+    free = [mid.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 5, cent.shape[0]))).astype(np.float32)
+    ids = eng.insert(newpts)
+    stuck = mid.side_fill
+    assert stuck >= 5   # no deletes: these can never fold without rebuild
+    assert eng.compact(rebuild=False) == 0 and mid.side_fill == stuck
+    moved = eng.compact()
+    assert moved == stuck and mid.side_fill == 0
+    assert eng.generation == 1
+    # capacity grew to absorb the drained spills; points still retrievable
+    req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert all(ids[j] in req.ids[j] for j in range(len(ids)))
+    # rebuild=True FORCES a repack even with an empty side buffer
+    assert eng.compact(rebuild=True) == 0
+    assert eng.generation == 2
+
+
+def test_rebuild_index_standalone_matches_mutable_search(base):
+    """rebuild_index on a bare MutableJunoIndex (no engine) preserves
+    results and drops tombstoned ids from storage entirely."""
+    pts, q, cfg, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=64)
+    rng = np.random.default_rng(19)
+    free = [mid.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 3, cent.shape[0]))).astype(np.float32)
+    mid.insert(newpts)
+    victims = [int(p) for p in np.asarray(idx.ivf.point_ids[c])[:2]]
+    mid.delete(victims)
+
+    s0, i0 = (np.asarray(x) for x in mid.search(q[:16], nprobe=8, k=20,
+                                                mode="H"))
+    new_data = rebuild_index(mid)
+    stored = np.asarray(new_data.ivf.point_ids)
+    for v in victims:
+        assert v not in stored[stored >= 0]
+    mid.swap_data(new_data)
+    assert mid.side_fill == 0
+    s1, i1 = (np.asarray(x) for x in mid.search(q[:16], nprobe=8, k=20,
+                                                mode="H"))
+    _assert_same_results(s0, i0, s1, i1)
+
+
+def test_distributed_per_shard_rebuild_parity(base):
+    """1-device mesh: per-shard rebuild drains the side buffer and the
+    distributed search is unchanged (scores AND ids bit-equal here — the
+    shard repack preserves in-cluster slot order)."""
+    from repro.dist.distributed_index import DistributedMutableIndex
+
+    pts, q, cfg, idx = base
+    mesh = jax.make_mesh((1,), ("data",))
+    dmi = DistributedMutableIndex(idx, mesh, side_capacity=64)
+    rng = np.random.default_rng(23)
+    free = [dmi.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 3, cent.shape[0]))).astype(np.float32)
+    ids = dmi.insert(newpts)
+    assert dmi.side_fill >= 3
+    victims = [int(p) for p in np.asarray(idx.ivf.point_ids[c])[:3]]
+    dmi.delete(victims)
+
+    dsearch = dmi.searcher(local_nprobe=16, k=10, mode="H")
+    s0, i0 = dsearch(dmi.data, jnp.asarray(q[:16]), dmi.side)
+    drained = dmi.rebuild()
+    assert drained >= 3 and dmi.side_fill == 0
+    s1, i1 = dsearch(dmi.data, jnp.asarray(q[:16]), dmi.side)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    # bookkeeping stays consistent: inserts still place correctly
+    more = dmi.insert(newpts[:2])
+    assert more[0] > max(ids)
+    s2, i2 = dsearch(dmi.data, jnp.asarray(newpts[:2]), dmi.side)
+    assert all(more[j] in np.asarray(i2)[j] for j in range(2))
+
+
+def test_distributed_rebuild_escalates_stuck_spills(base):
+    """Spills whose cluster is FULL (no tombstones) cannot fit the fixed
+    per-shard capacity: rebuild() must escalate to a capacity-growing
+    full swap and still drain the buffer — the same guarantee the
+    single-device compact() gives."""
+    from repro.dist.distributed_index import DistributedMutableIndex
+
+    pts, q, cfg, idx = base
+    mesh = jax.make_mesh((1,), ("data",))
+    dmi = DistributedMutableIndex(idx, mesh, side_capacity=64)
+    rng = np.random.default_rng(37)
+    free = [dmi.free_slots(c) for c in range(16)]
+    c = int(np.argmin(free))
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (free[c] + 4, cent.shape[0]))).astype(np.float32)
+    ids = dmi.insert(newpts)
+    assert dmi.side_fill >= 4          # cluster full, NO deletes
+    old_cap = dmi.data.ivf.point_ids.shape[1]
+    drained = dmi.rebuild()
+    assert drained >= 4 and dmi.side_fill == 0
+    assert dmi.data.ivf.point_ids.shape[1] > old_cap   # capacity grew
+    dsearch = dmi.searcher(local_nprobe=16, k=10, mode="H")
+    _, got = dsearch(dmi.data, jnp.asarray(newpts), dmi.side)
+    assert all(ids[j] in np.asarray(got)[j] for j in range(len(ids)))
+    # bookkeeping survived the swap: fresh inserts land in real slots
+    more = dmi.insert(newpts[:1])
+    assert more[0] > max(ids) and dmi.side_fill == 0
+
+
+def test_swap_rebuilds_rt_routing_lazily(base):
+    """prefilter="rt": swap_index drops the grid + routing snapshot; the
+    next rt-routed request rebuilds both lazily and serves correctly."""
+    pts, q, cfg, idx = base
+    eng = AnnServeEngine(idx, side_capacity=64, prefilter="rt",
+                         rt_scale=1e6)   # full coverage: parity regime
+    rng = np.random.default_rng(31)
+    newpts, ids, _ = _spill_and_tombstone(eng, idx, pts, rng)
+    assert eng.index.rt_grid is not None
+    eng.swap_index()
+    assert eng.index.rt_grid is None and eng._rt_state is None
+    req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert eng.index.rt_grid is not None   # rebuilt on demand
+    assert all(ids[j] in req.ids[j] for j in range(len(ids)))
+
+
+def test_streaming_to_store_to_serving_lifecycle(base, tmp_path):
+    """End-to-end: stream-build → versioned store → load → serve → spill
+    → rebuild → next store generation. The full offline/online loop."""
+    pts, q, cfg, _ = base
+    store = ArtifactStore(str(tmp_path / "lifecycle"))
+    sidx = build_streaming(array_source(pts, 2048), cfg)
+    store.put("prod", sidx, cfg)
+
+    loaded = store.get("prod", expect_config=cfg)
+    eng = AnnServeEngine(loaded.data, side_capacity=64)
+    rng = np.random.default_rng(29)
+    _spill_and_tombstone(eng, loaded.data, pts, rng)
+    eng.swap_index()
+    v2 = store.put("prod", eng.index.data, cfg)
+    assert v2 == 2
+    again = store.get("prod")
+    np.testing.assert_array_equal(
+        np.asarray(again.data.ivf.point_ids),
+        np.asarray(eng.index.data.ivf.point_ids))

@@ -38,6 +38,40 @@ def test_kmeans_reduces_quantization_error():
     assert jnp.all(jnp.isfinite(st8.centroids))
 
 
+def test_dead_cluster_reseed_indices_are_distinct():
+    """Regression: the old reseed map ``(init_idx * (i + 2) + 7) % n``
+    sent DIFFERENT dead clusters to the SAME point whenever two init
+    indices coincided mod ``n / gcd(i + 2, n)`` (e.g. init 1 and 5, n=12,
+    iteration 1 both landed on point 10). The fixed map must be injective
+    over cluster positions for every iteration whenever k <= n."""
+    from repro.core.kmeans import _reseed_indices
+    # the documented historical collision: old formula gave 1*3+7=10 and
+    # 5*3+7=22%12=10 — same reseed point for two dead clusters
+    assert (1 * 3 + 7) % 12 == (5 * 3 + 7) % 12
+    for i in range(8):
+        for n, k in [(12, 8), (10, 10), (100, 64), (9, 3)]:
+            idx = np.asarray(_reseed_indices(i, n, k))
+            assert len(set(idx.tolist())) == k, (i, n, k, idx)
+            assert idx.min() >= 0 and idx.max() < n
+
+
+def test_kmeans_many_dead_clusters_cover_data():
+    """With heavily duplicated points (8 distinct coords tiled 8x) and
+    k=16, duplicate init centroids leave ~half the clusters dead every
+    iteration. Distinct reseed targets must still spread centroids over
+    every distinct coordinate — a shared reseed point could not."""
+    base = np.arange(8, dtype=np.float32)[:, None] * \
+        np.array([100.0, -50.0], np.float32)[None, :]
+    pts = jnp.asarray(np.tile(base, (8, 1)))          # tiled: any 16
+    st = kmeans(pts, n_clusters=16, n_iters=6,        # consecutive rows
+                key=jax.random.PRNGKey(0))            # cover all 8 coords
+    cents = np.asarray(st.centroids)
+    assert np.all(np.isfinite(cents))
+    covered = [np.any(np.all(np.abs(cents - b[None]) < 1e-3, axis=1))
+               for b in base]
+    assert all(covered), covered
+
+
 def test_assign_matches_bruteforce():
     key = jax.random.PRNGKey(1)
     pts = jax.random.normal(key, (500, 6))

@@ -12,9 +12,11 @@ import inspect
 
 import pytest
 
+import repro.build as build
 import repro.core as core
 import repro.rt as rt
 from repro.core.juno import MutableIndexBase, MutableJunoIndex
+from repro.dist.distributed_index import DistributedMutableIndex
 from repro.kernels import ops
 from repro.serve.ann import AnnRequest, AnnServeEngine
 
@@ -40,6 +42,17 @@ PUBLIC = [
     rt.CentroidGrid, rt.build_grid, rt.query_radius, rt.survivor_mask,
     rt.routing_state, rt.probe_budget, rt.update_radii, rt.save_grid,
     rt.load_grid, rt.sphere_hits, rt.sphere_hits_host,
+    # out-of-core build / artifact store / rebuild (repro.build)
+    build.build_streaming, build.build_streaming_sharded, build.array_source,
+    build.BuildProbe, build.split_shards, build.merge_shards,
+    build.save_index, build.load_index, build.verify_artifact,
+    build.config_hash, build.ArtifactStore, build.ArtifactStore.put,
+    build.ArtifactStore.get, build.ArtifactStore.versions,
+    build.ArtifactStore.latest, build.ArtifactError, build.rebuild_index,
+    # rebuild/hot-swap wiring
+    MutableJunoIndex.swap_data, AnnServeEngine.swap_index,
+    DistributedMutableIndex.swap_data,
+    DistributedMutableIndex.rebuild_shard, DistributedMutableIndex.rebuild,
 ]
 
 
@@ -57,13 +70,17 @@ def test_public_symbol_has_docstring(obj):
 
 
 def test_public_modules_have_docstrings():
+    import repro.build.pipeline
+    import repro.build.rebuild
+    import repro.build.store
     import repro.core.juno
     import repro.dist.distributed_index
     import repro.kernels.ref
     import repro.rt.grid
     import repro.rt.intersect
     import repro.serve.ann
-    for mod in [core, rt, ops, repro.core.juno, repro.serve.ann,
+    for mod in [core, rt, ops, build, repro.core.juno, repro.serve.ann,
                 repro.rt.grid, repro.rt.intersect, repro.kernels.ref,
-                repro.dist.distributed_index]:
+                repro.dist.distributed_index, repro.build.pipeline,
+                repro.build.store, repro.build.rebuild]:
         assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__
