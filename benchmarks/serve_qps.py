@@ -25,8 +25,20 @@ masked lanes. Gated (rt H2-tier QPS >= dense-scan) under
 BENCH_rt.json) including both engines' recall@10 — rt pruning also
 IMPROVES ip-workload H2 recall by keeping junk clusters out of stage 1.
 
+A fourth section drives an ``AnnServeFleet`` (2 replicas × 2 shards on 8
+emulated host devices) with OPEN-LOOP mixed query+insert traffic —
+steady Poisson and bursty arrival profiles at ~4× the fleet's measured
+closed-loop capacity — and gates TAIL LATENCY: with bounded admission
+queues (``policy="shed"``) the p99 over served requests must not exceed
+the unbounded-queue fleet's p99 under the identical trace, and shedding
+must actually fire. Open-loop latency counts schedule slip (measured
+from the intended arrival time), so an unbounded queue honestly shows
+the backlog blow-up that bounded admission exists to cap. ``--json-
+fleet`` records the numbers (committed as BENCH_fleet.json); see
+docs/fleet.md for the methodology.
+
     PYTHONPATH=src python benchmarks/serve_qps.py [--smoke] [--json PATH]
-        [--json-rt PATH]
+        [--json-rt PATH] [--json-fleet PATH]
 """
 from __future__ import annotations
 
@@ -38,6 +50,11 @@ import time
 
 import numpy as np
 
+# 8 emulated host devices so the 2 replicas x 2 shards fleet topology is
+# real (must be set before anything imports jax; run.py never imports this
+# module, so the flag stays scoped to serve_qps runs)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
@@ -45,6 +62,7 @@ if _ROOT not in sys.path:
 from benchmarks import common  # noqa: E402
 from repro.core import search  # noqa: E402
 from repro.serve.ann import AnnServeEngine  # noqa: E402
+from repro.serve.fleet import AnnServeFleet  # noqa: E402
 
 # request trace knobs: (n_queries, k, mode, recall_target) cycled over
 REQUEST_MIX = [
@@ -290,6 +308,189 @@ def run_rt_prefilter(n_requests: int = 96) -> dict:
     return {"dataset": "tti", "speedup": speedup, **out}
 
 
+# fleet traffic: (n_queries,) request sizes cycled over, all on ONE jit
+# signature (k=10, mode "M", nprobe 8) so the tail measures queueing and
+# batching — not compile blips or mode mix — under overload
+FLEET_MIX = (1, 2, 4, 1)
+FLEET_INSERT_EVERY = 24     # an insert batch every this many events
+FLEET_INSERT_ROWS = 4
+
+
+def _fleet_arrivals(n_events: int, rate: float, profile: str,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Arrival-time offsets (seconds) for an open-loop trace.
+
+    "steady" draws i.i.d. exponential gaps (Poisson arrivals at
+    ``rate``). "bursty" alternates bursts of 24 events at 4x rate with
+    silences of 18/rate, which preserves the long-run rate while
+    concentrating arrivals — the profile bounded admission exists for.
+    """
+    if profile == "steady":
+        gaps = rng.exponential(1.0 / rate, n_events)
+    elif profile == "bursty":
+        gaps = []
+        while len(gaps) < n_events:
+            gaps.extend(rng.exponential(1.0 / (4 * rate),
+                                        min(24, n_events - len(gaps))))
+            gaps[-1] += 18.0 / rate      # inter-burst silence
+        gaps = np.asarray(gaps[:n_events])
+    else:
+        raise ValueError(f"unknown profile {profile!r}")
+    return np.cumsum(gaps)
+
+
+def _fleet_events(queries: np.ndarray, new_points: np.ndarray,
+                  n_events: int):
+    """Mixed query+insert event payloads (arrival times added per profile)."""
+    events, pos, ins = [], 0, 0
+    for i in range(n_events):
+        if i and i % FLEET_INSERT_EVERY == 0 and ins < len(new_points):
+            events.append(("insert",
+                           new_points[ins:ins + FLEET_INSERT_ROWS]))
+            ins += FLEET_INSERT_ROWS
+            continue
+        nq = FLEET_MIX[i % len(FLEET_MIX)]
+        rows = np.take(queries, range(pos, pos + nq), axis=0, mode="wrap")
+        events.append(("query", rows))
+        pos += nq
+    return events
+
+
+def _fleet_replay(fleet: AnnServeFleet, events, offsets) -> dict:
+    """Open-loop replay: submit each event at its intended time, stepping
+    the fleet while waiting; latency is measured from the INTENDED arrival
+    (schedule slip counts against the server — no coordinated omission)."""
+    fleet.reset_metrics()
+    base = time.perf_counter()
+    for (kind, payload), t_off in zip(events, offsets):
+        target = base + t_off
+        while time.perf_counter() < target:
+            if fleet.pending:
+                fleet.step()
+            else:
+                time.sleep(min(2e-4, max(0.0, target - time.perf_counter())))
+        if kind == "insert":
+            fleet.insert(payload)
+        else:
+            fleet.submit(payload, k=10, mode="M", nprobe=8, t_arrival=target)
+    fleet.run()
+    return fleet.latency_summary()
+
+
+def _warm_fleet(fleet: AnnServeFleet, queries: np.ndarray,
+                rng: np.random.Generator) -> None:
+    """Warm the single fleet signature on every replica, spill included.
+
+    Forces one side-buffer spill first so the side≠None search trace is
+    the one timed throughout (the sharded path always passes the side
+    buffer, but the unsharded fallback elides an empty one — a first
+    spill mid-measurement would recompile inside the timed region).
+    """
+    eng = fleet.engines[0]
+    n_clusters = eng.index.data.ivf.point_ids.shape[0]
+    c = int(np.argmin([eng.index.free_slots(cc) for cc in range(n_clusters)]))
+    cent = np.asarray(eng.index.data.ivf.centroids[c])
+    spillers = (cent[None] + 0.01 * rng.standard_normal(
+        (eng.index.free_slots(c) + 1, queries.shape[1]))).astype(np.float32)
+    fleet.insert(spillers)
+    assert eng.index.side_fill >= 1, "fleet warmup spill failed"
+    for _ in range(2):
+        for i in range(12):
+            fleet.submit(np.take(queries, range(i * 4, i * 4 + 4), axis=0,
+                                 mode="wrap"), k=10, mode="M", nprobe=8)
+        fleet.run()
+
+
+def run_fleet(n_events: int = 120) -> dict:
+    """Tail latency of bounded vs unbounded admission under overload.
+
+    Topology: 2 replicas × 2 shards when >= 4 devices are visible (the
+    CI/default path — the module forces 8 emulated host devices), else
+    2 unsharded replicas. Method: measure the fleet's CLOSED-LOOP
+    capacity (rows/s with the trace submitted all at once), then replay
+    the mixed query+insert trace open-loop at ~4× that rate — a
+    structural overload no calibration error can undo — through two
+    identically-warmed fleets: bounded admission (``policy="shed"``,
+    per-replica queue ≈ 0.15 s of capacity) and unbounded
+    (``policy="queue"``). Gate, per arrival profile: bounded p99 <=
+    unbounded p99 AND bounded shed > 0. The unbounded fleet serves
+    everything but its tail absorbs the whole backlog drain; the bounded
+    fleet converts that tail into explicit typed rejections — the SLO
+    trade this layer exists to make (docs/fleet.md).
+    """
+    import jax
+
+    pts, queries, index, gt, cfg = common.get_bench_index("deep")
+    queries = np.asarray(queries)
+    rng = np.random.default_rng(7)
+    d = queries.shape[1]
+    new_points = (np.asarray(pts)[:64].mean(0)[None] + rng.standard_normal(
+        (n_events // FLEET_INSERT_EVERY * FLEET_INSERT_ROWS + FLEET_INSERT_ROWS,
+         d))).astype(np.float32)
+    spr = 2 if jax.device_count() >= 4 else 1
+    fleet_kw = dict(n_replicas=2, shards_per_replica=spr,
+                    metric=cfg.metric, batch_buckets=(8,))
+
+    events = _fleet_events(queries, new_points, n_events)
+    query_rows = sum(p.shape[0] for k, p in events if k == "query")
+
+    # closed-loop capacity: same fleet shape, trace submitted all at once
+    calib = AnnServeFleet(index, **fleet_kw)
+    _warm_fleet(calib, queries, rng)
+    t0 = time.perf_counter()
+    for kind, payload in events:
+        if kind == "query":
+            calib.submit(payload, k=10, mode="M", nprobe=8)
+    calib.run()
+    capacity = query_rows / (time.perf_counter() - t0)          # rows/s
+    mean_rows = query_rows / sum(1 for k, _ in events if k == "query")
+    rate = 4.0 * capacity / mean_rows                           # events/s
+    # per-replica admission bound = 20 ms of fleet capacity: under 4x
+    # overload the backlog reaches ~40% of the trace per replica, far past
+    # this bound, so shedding fires structurally — while the bound still
+    # caps a served request's queue wait at ~tens of ms
+    max_queue = max(8, int(0.02 * capacity))                    # rows/replica
+
+    fleets = {
+        "bounded": AnnServeFleet(index, policy="shed", max_queue=max_queue,
+                                 **fleet_kw),
+        "unbounded": AnnServeFleet(index, policy="queue",
+                                   max_queue=1 << 30, **fleet_kw),
+    }
+    for f in fleets.values():
+        _warm_fleet(f, queries, rng)
+
+    out = {"devices": jax.device_count(), "n_replicas": 2,
+           "shards_per_replica": spr, "capacity_qps": capacity,
+           "overload_rate_qps": rate * mean_rows, "max_queue_rows": max_queue,
+           "n_events": n_events, "profiles": {}}
+    for profile in ("steady", "bursty"):
+        offsets = _fleet_arrivals(len(events), rate, profile,
+                                  np.random.default_rng(11))
+        # interleave two passes per variant and keep each variant's best-
+        # p99 pass: this box's load drifts on the second scale, and the
+        # structural effect under test (bounded wait vs backlog drain) is
+        # 5-10x — far larger than pass-to-pass drift after interleaving
+        passes = {name: [] for name in fleets}
+        for _ in range(2):
+            for name, f in fleets.items():
+                passes[name].append(_fleet_replay(f, events, offsets))
+        res = {name: min(ps, key=lambda s: s["p99"])
+               for name, ps in passes.items()}
+        ok = (res["bounded"]["p99"] <= res["unbounded"]["p99"]
+              and res["bounded"]["shed"] > 0)
+        res["gate_ok"] = ok
+        out["profiles"][profile] = res
+        common.emit(f"serve_qps.fleet_{profile}", 0.0,
+                    f"bounded_p99_ms={res['bounded']['p99'] * 1e3:.1f};"
+                    f"unbounded_p99_ms={res['unbounded']['p99'] * 1e3:.1f};"
+                    f"shed={res['bounded']['shed']};"
+                    f"served={res['bounded']['served']};"
+                    f"gate={'OK' if ok else 'FAIL'}")
+    out["gate_ok"] = all(p["gate_ok"] for p in out["profiles"].values())
+    return out
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="deep",
@@ -303,6 +504,8 @@ def main() -> int:
                     help="write fused-vs-unfused + engine QPS numbers here")
     ap.add_argument("--json-rt", default=None, metavar="PATH",
                     help="write rt-prefilter vs dense-scan numbers here")
+    ap.add_argument("--json-fleet", default=None, metavar="PATH",
+                    help="write fleet tail-latency numbers here")
     args = ap.parse_args()
     if args.smoke:
         common.set_smoke_sizes()
@@ -322,6 +525,20 @@ def main() -> int:
     print(f"# H2 tier rt-prefilter {rt_res['rt']['qps']:.0f} QPS vs "
           f"dense-scan {rt_res['scan']['qps']:.0f} QPS -> "
           f"{'OK' if rt_ok else 'REGRESSION'}", file=sys.stderr)
+    fleet_res = run_fleet()
+    fleet_ok = fleet_res["gate_ok"]
+    for prof, pres in fleet_res["profiles"].items():
+        print(f"# fleet {prof}: bounded p99 "
+              f"{pres['bounded']['p99'] * 1e3:.1f} ms vs unbounded "
+              f"{pres['unbounded']['p99'] * 1e3:.1f} ms "
+              f"(shed {pres['bounded']['shed']}) -> "
+              f"{'OK' if pres['gate_ok'] else 'REGRESSION'}",
+              file=sys.stderr)
+    if args.json_fleet:
+        with open(args.json_fleet, "w") as fh:
+            json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
+                       **fleet_res}, fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if args.json_rt:
         with open(args.json_rt, "w") as fh:
             json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
@@ -336,7 +553,8 @@ def main() -> int:
                            "single_shot_qps": res["base_qps"]},
                        **res["fused"]}, fh, indent=2, sort_keys=True)
             fh.write("\n")
-    if (args.check or args.smoke) and not (ok and fused_ok and rt_ok):
+    if (args.check or args.smoke) and not (ok and fused_ok and rt_ok
+                                           and fleet_ok):
         return 1
     return 0
 

@@ -20,7 +20,7 @@ from repro.data import DEEP_LIKE, make_dataset
 from repro.dist.distributed_index import (DistributedMutableIndex,
                                           make_distributed_search,
                                           shard_index)
-from repro.serve import AnnServeEngine
+from repro.serve import AnnServeEngine, AnnServeFleet
 
 
 def serve_online(index, points, queries, gt):
@@ -80,6 +80,29 @@ def serve_rt_prefilter(index, queries, gt):
           f"cap {eng.index.rt_grid.capacity})")
 
 
+def serve_fleet(index, queries):
+    """Replica fleet: 2 replicas x 2 shards, admission control, tail stats."""
+    fleet = AnnServeFleet(index, n_replicas=2, shards_per_replica=2,
+                          policy="shed", max_queue=64, batch_buckets=(8, 16))
+    reqs = [fleet.submit(queries[i * 2:(i + 1) * 2], k=10, mode="M",
+                         nprobe=8) for i in range(24)]
+    fleet.run()
+    fleet.insert(np.asarray(queries[:4]))          # fans out to both replicas
+    fleet.fail_replica(0)                          # routing-level failover
+    more = [fleet.submit(queries[i * 2:(i + 1) * 2], k=10, mode="M",
+                         nprobe=8) for i in range(4)]
+    fleet.run()
+    fleet.restore_replica(0)
+    summ = fleet.latency_summary()
+    per = [dict(c) for c in fleet.stats["per_replica"]]
+    print(f"fleet (2x2 on {fleet.engines[0].index.n_shards}-shard "
+          f"sub-meshes): served {summ['served']} "
+          f"(shed {summ['shed']}, rerouted {summ['rerouted']}), "
+          f"p50/p95/p99 = {summ['p50'] * 1e3:.0f}/{summ['p95'] * 1e3:.0f}/"
+          f"{summ['p99'] * 1e3:.0f} ms, per-replica {per}")
+    assert all(r.done for r in reqs + more)
+
+
 def serve_distributed_mutable(index, queries, mesh):
     """Sharded mutable serving: inserts routed to the owning shard."""
     dmi = DistributedMutableIndex(index, mesh, side_capacity=128)
@@ -123,6 +146,7 @@ def main():
     serve_online(index, points, queries, gt)
     serve_rt_prefilter(index, np.asarray(queries), gt)
     serve_distributed_mutable(index, queries, mesh)
+    serve_fleet(index, np.asarray(queries))
 
 
 if __name__ == "__main__":

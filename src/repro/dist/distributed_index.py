@@ -133,6 +133,7 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     higher_better = metric == "ip" if mode in ("H", "H2") else True
 
     def local_search(idx: JunoIndexData, queries: jnp.ndarray, *rest):
+        """Per-shard scan over local clusters + exact all-gather merge."""
         rest = list(rest)
         side = rest.pop(0) if with_side else None
         rt_grid = rest.pop(0) if prefilter == "rt" else None
@@ -192,6 +193,7 @@ def make_distributed_insert(mesh: Mesh):
                           is_leaf=lambda x: isinstance(x, P))
 
     def apply(idx: JunoIndexData, clusters, slots, ids, codes):
+        """Scatter new (id, code) cells into their owning clusters."""
         ivf = idx.ivf._replace(
             point_ids=idx.ivf.point_ids.at[clusters, slots].set(ids),
             valid=idx.ivf.valid.at[clusters, slots].set(True))
@@ -216,6 +218,7 @@ def make_distributed_row_update(mesh: Mesh):
                           is_leaf=lambda x: isinstance(x, P))
 
     def apply(idx: JunoIndexData, clusters, row_ids, row_valid, row_codes):
+        """Replace whole padded rows of the given clusters."""
         ivf = idx.ivf._replace(
             point_ids=idx.ivf.point_ids.at[clusters].set(row_ids),
             valid=idx.ivf.valid.at[clusters].set(row_valid))
@@ -233,6 +236,7 @@ def make_distributed_delete(mesh: Mesh):
                           is_leaf=lambda x: isinstance(x, P))
 
     def apply(idx: JunoIndexData, clusters, slots):
+        """Clear the valid bit of the given (cluster, slot) cells."""
         ivf = idx.ivf._replace(
             valid=idx.ivf.valid.at[clusters, slots].set(False))
         return idx._replace(ivf=ivf)
@@ -262,6 +266,7 @@ class DistributedMutableIndex(MutableIndexBase):
 
     def __init__(self, idx: JunoIndexData, mesh: Mesh, *,
                  side_capacity: int = 256, rt_grid=None):
+        """Shard a built global index onto ``mesh`` and wire its updaters."""
         n_clusters = idx.ivf.point_ids.shape[0]
         n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
         assert n_clusters % n_shards == 0, \

@@ -1,2 +1,4 @@
 from .ann import AnnRequest, AnnServeEngine  # noqa: F401
 from .engine import Request, ServeEngine  # noqa: F401
+from .fleet import (AnnServeFleet, FleetRequest,  # noqa: F401
+                    LatencyHistogram, Rejection)

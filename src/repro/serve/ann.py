@@ -43,13 +43,23 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.juno import (JunoIndexData, MutableJunoIndex, _search_batch,
+from repro.core.juno import (JunoIndexData, MutableIndexBase,
+                             MutableJunoIndex, _search_batch,
                              _search_batch_two_stage)
 
 
 @dataclasses.dataclass
 class AnnRequest:
-    """One queued search request (inputs + engine-filled results)."""
+    """One queued search request (inputs + engine-filled results).
+
+    The engine stamps a timestamp chain onto every served request —
+    ``t_submit`` (queued) → ``t_batch`` (picked into a tick's batch) →
+    ``t_compute`` (jitted search returned, host-materialized) →
+    ``t_done`` (results sliced back onto the request) — so queue wait,
+    compute, and merge time are separable per request (the fleet layer's
+    latency histogram is fed from exactly these, see
+    ``repro.serve.fleet``).
+    """
 
     rid: int
     queries: np.ndarray                 # (q, D) f32
@@ -63,6 +73,8 @@ class AnnRequest:
     ids: Optional[np.ndarray] = None
     done: bool = False
     t_submit: float = 0.0
+    t_batch: float = 0.0                # batch formation (tick picked it)
+    t_compute: float = 0.0              # jitted search done (host-synced)
     t_done: float = 0.0
 
     @property
@@ -129,7 +141,10 @@ class AnnServeEngine:
         rt_scale : float
             Radius knob for "rt" (monotone; large ⇒ no pruning).
         """
-        self.index = (index if isinstance(index, MutableJunoIndex)
+        # any MutableIndexBase works as the served index: the sharded
+        # DistributedMutableIndex flows through here too (the fleet layer's
+        # _ShardedAnnServeEngine passes one and overrides _dispatch)
+        self.index = (index if isinstance(index, MutableIndexBase)
                       else MutableJunoIndex(index,
                                             side_capacity=side_capacity))
         self.metric = metric
@@ -197,6 +212,16 @@ class AnnServeEngine:
         self._rid += 1
         self.queue.append(req)
         return req
+
+    @property
+    def queued_rows(self) -> int:
+        """Total query rows currently waiting in this engine's queue.
+
+        The fleet router's load signal: least-outstanding-rows balancing
+        (``repro.serve.fleet``) routes each new request to the replica
+        whose engine reports the smallest value here.
+        """
+        return sum(r.queries.shape[0] for r in self.queue)
 
     def route(self, req: AnnRequest) -> tuple[int, str, int]:
         """Resolve per-request knobs to one static jit signature.
@@ -272,6 +297,7 @@ class AnnServeEngine:
             picked.append(req)
             rows += req.queries.shape[0]
         self.queue = collections.deque(rest)
+        t_batch = time.perf_counter()   # batch formed; queue wait ends here
 
         k, mode, nprobe = sig
         batch = np.concatenate([r.queries for r in picked], axis=0)
@@ -293,6 +319,9 @@ class AnnServeEngine:
             out_i.append(np.asarray(ids)[:n])
             self.stats["padded_rows"] += bucket - n
             self.stats["signatures"][(k, mode, nprobe, bucket)] += 1
+        # np.asarray above forced host materialization, so this bounds the
+        # jitted compute (incl. device->host) for every request in the tick
+        t_compute = time.perf_counter()
         s, ids = np.concatenate(out_s), np.concatenate(out_i)
 
         off, now = 0, time.perf_counter()
@@ -300,6 +329,7 @@ class AnnServeEngine:
             q = req.queries.shape[0]
             req.scores = s[off:off + q, :req.k]
             req.ids = ids[off:off + q, :req.k]
+            req.t_batch, req.t_compute = t_batch, t_compute
             req.done, req.t_done = True, now
             off += q
             self.completed.append(req)
@@ -434,12 +464,14 @@ class AnnServeEngine:
         Returns
         -------
         dict
-            ``{"n", "p50", "p95", "max"}`` in seconds (submit → done), or
-            ``{"n": 0}`` when nothing has completed.
+            ``{"n", "p50", "p95", "p99", "max"}`` in seconds (submit →
+            done), or ``{"n": 0}`` when nothing has completed. For
+            streaming accounting that survives ``completed`` truncation,
+            use the fleet layer's ``LatencyHistogram`` instead.
         """
         lats = sorted(r.latency for r in self.completed)
         if not lats:
             return {"n": 0}
         pick = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))]  # noqa: E731
         return {"n": len(lats), "p50": pick(0.5), "p95": pick(0.95),
-                "max": lats[-1]}
+                "p99": pick(0.99), "max": lats[-1]}

@@ -1,0 +1,620 @@
+"""Replica-fleet ANN serving with admission control and tail-latency SLOs.
+
+:class:`AnnServeFleet` is the layer between "one serving engine" and
+"heavy traffic": a **replica group × shard group** topology on top of
+:class:`repro.serve.ann.AnnServeEngine`.
+
+* **Replicas** — each replica group wraps one engine over its own copy of
+  the index (reads route to exactly one replica; writes fan out to every
+  replica, and the deterministic slot bookkeeping guarantees all replicas
+  assign identical ids, so any replica answers any query identically).
+* **Shards** — with ``shards_per_replica > 1`` each replica's engine is a
+  :class:`_ShardedAnnServeEngine`: its index is a
+  :class:`repro.dist.distributed_index.DistributedMutableIndex` cluster-
+  sharded over a **private sub-mesh** of devices, and dispatch runs the
+  existing ``make_distributed_search`` exact-merge path.
+* **Routing** — least-outstanding-rows: every request goes to the healthy
+  replica whose engine reports the smallest ``queued_rows``.
+* **Admission control** — per-replica queues are bounded (``max_queue``
+  query rows). When the least-loaded replica is full, ``policy="shed"``
+  returns a typed :class:`Rejection` on the request (never an exception
+  on the data plane) and ``policy="queue"`` parks the request in a fleet
+  backlog that drains as capacity frees. Requests may carry a deadline;
+  a request whose deadline passes while still queued is dropped *before
+  compute* with a ``"deadline"`` rejection.
+* **Latency tracing** — every served request's timestamp chain
+  (``t_arrival → t_batch → t_compute → t_done``, stamped by the engine
+  tick) feeds a streaming log-bucketed :class:`LatencyHistogram`
+  (p50/p95/p99 in fixed memory) plus per-segment queue/compute/merge
+  accumulators. ``benchmarks/serve_qps.py`` gates the p99 under an
+  open-loop mixed query+insert overload (BENCH_fleet.json).
+
+The failure model is routing-level: :meth:`AnnServeFleet.fail_replica`
+takes a replica out of rotation and re-admits its queued requests to the
+survivors — results are preserved exactly (replicas are identical).
+Recovering lost *state* is the artifact store's job
+(``repro.build.store`` + ``swap_index``), not this layer's.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.juno import JunoIndexData
+from repro.serve.ann import AnnRequest, AnnServeEngine
+
+
+class LatencyHistogram:
+    """Streaming log-bucketed latency histogram with percentile queries.
+
+    Fixed memory (one int64 count per bucket), so it can absorb an
+    unbounded request stream: buckets are geometrically spaced between
+    ``lo`` and ``hi`` seconds at ``bins_per_decade`` buckets per decade
+    (default 24 → ≤ ~10 % relative resolution). ``percentile`` returns
+    the **upper edge** of the bucket holding the requested quantile
+    (clamped to the exact observed max), i.e. a conservative
+    tail-latency estimate — an SLO gate on it can over-reject by at most
+    one bucket width, never under-reject.
+    """
+
+    def __init__(self, lo: float = 1e-6, hi: float = 500.0,
+                 bins_per_decade: int = 24):
+        """Allocate the bucket table spanning [lo, hi] seconds.
+
+        Parameters
+        ----------
+        lo, hi : float
+            Smallest / largest latency resolved exactly; values outside
+            land in the under/overflow buckets.
+        bins_per_decade : int
+            Geometric bucket density (resolution ≈ ``10^(1/bins)``).
+        """
+        n_edges = int(math.ceil(math.log10(hi / lo) * bins_per_decade)) + 1
+        #: upper edge of bucket b is _edges[b]; the final bucket (index
+        #: len(_edges)) is the overflow bucket, bounded by the exact max
+        self._edges = lo * 10.0 ** (np.arange(n_edges) / bins_per_decade)
+        self._counts = np.zeros(n_edges + 1, np.int64)
+        self.n = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def add(self, seconds: float) -> None:
+        """Record one latency observation (in seconds)."""
+        s = float(seconds)
+        b = int(np.searchsorted(self._edges, s, side="left"))
+        self._counts[b] += 1
+        self.n += 1
+        self.sum += s
+        self.max = max(self.max, s)
+
+    def merge(self, other: "LatencyHistogram") -> None:
+        """Fold another histogram (same bucketing) into this one."""
+        if other._counts.shape != self._counts.shape:
+            raise ValueError("histogram bucketings differ")
+        self._counts += other._counts
+        self.n += other.n
+        self.sum += other.sum
+        self.max = max(self.max, other.max)
+
+    def percentile(self, p: float) -> float:
+        """Upper-edge estimate of the ``p`` quantile (0 < p <= 1)."""
+        if self.n == 0:
+            return 0.0
+        target = max(1, int(math.ceil(p * self.n)))
+        cum = np.cumsum(self._counts)
+        b = int(np.searchsorted(cum, target))
+        edge = self._edges[b] if b < len(self._edges) else self.max
+        return float(min(edge, self.max))
+
+    def summary(self) -> dict:
+        """``{"n", "mean", "p50", "p95", "p99", "max"}`` in seconds."""
+        if self.n == 0:
+            return {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
+                    "p99": 0.0, "max": 0.0}
+        return {"n": self.n, "mean": self.sum / self.n,
+                "p50": self.percentile(0.50), "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99), "max": self.max}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Typed admission verdict attached to a shed/expired request.
+
+    Returned on the request object — admission control never raises on
+    the data plane, so a traffic spike degrades into explicit,
+    client-visible rejections instead of exceptions mid-router.
+    ``reason`` is one of ``"queue_full"`` (bounded queues all at
+    capacity under ``policy="shed"``), ``"deadline"`` (expired while
+    queued, dropped before compute), or ``"no_replica"`` (every replica
+    marked down).
+    """
+
+    reason: str
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """One fleet-level request: routing envelope around an AnnRequest.
+
+    ``status`` walks ``"queued" → "done"`` on the happy path, or
+    terminally ``"shed"`` / ``"expired"`` with :attr:`rejection` set.
+    ``t_arrival`` defaults to the submit time but open-loop load
+    generators pass the *intended* arrival time, so measured latency
+    includes schedule slip when the serving side falls behind — the
+    honest open-loop convention (no coordinated omission).
+    """
+
+    rid: int
+    queries: np.ndarray
+    k: int = 10
+    mode: str = "auto"
+    nprobe: int = 0
+    recall_target: float = 0.9
+    deadline: Optional[float] = None     # absolute perf_counter() time
+    t_arrival: float = 0.0
+    replica: int = -1
+    status: str = "queued"               # queued | done | shed | expired
+    rejection: Optional[Rejection] = None
+    inner: Optional[AnnRequest] = None
+
+    @property
+    def done(self) -> bool:
+        """True once the request was served (not shed/expired)."""
+        return self.status == "done"
+
+    @property
+    def ids(self) -> Optional[np.ndarray]:
+        """(q, k) result ids, or None unless served."""
+        return self.inner.ids if self.status == "done" else None
+
+    @property
+    def scores(self) -> Optional[np.ndarray]:
+        """(q, k) result scores, or None unless served."""
+        return self.inner.scores if self.status == "done" else None
+
+    def trace(self) -> dict:
+        """Per-segment latencies (seconds) of a served request.
+
+        ``queue`` = arrival → batch formation (admission wait,
+        coalescing wait, and any open-loop schedule slip), ``compute`` =
+        batch formation → jitted search host-synced, ``merge`` = compute
+        → results sliced back onto the request, ``total`` = arrival →
+        done. Empty dict unless ``status == "done"``.
+        """
+        if self.status != "done" or self.inner is None:
+            return {}
+        i = self.inner
+        return {"queue": i.t_batch - self.t_arrival,
+                "compute": i.t_compute - i.t_batch,
+                "merge": i.t_done - i.t_compute,
+                "total": i.t_done - self.t_arrival}
+
+
+class _ShardedAnnServeEngine(AnnServeEngine):
+    """An AnnServeEngine whose dispatch is cluster-sharded over a sub-mesh.
+
+    The replica-private data plane of a sharded fleet: the served index
+    is a :class:`~repro.dist.distributed_index.DistributedMutableIndex`
+    on a mesh built from a *subset* of the host's devices, and every
+    signature dispatches through ``make_distributed_search(...,
+    with_side=True)`` (exact top-k merge; the request-visible contract —
+    routing, batching, timestamps — is inherited unchanged). The probe
+    budget splits across shards: a resolved ``nprobe`` runs as
+    ``ceil(nprobe / n_shards)`` probes per shard, so the global scanned
+    work matches the unsharded engine's budget. ``fused`` / ``rt``
+    serving modes are not wired through this path (ValueError).
+    """
+
+    def __init__(self, index: JunoIndexData, mesh, *,
+                 side_capacity: int = 256, **kw):
+        """Build the replica engine over ``mesh`` (a private sub-mesh)."""
+        from repro.dist.distributed_index import DistributedMutableIndex
+        if kw.get("fused") or kw.get("prefilter", "scan") != "scan":
+            raise ValueError("sharded fleet replicas serve the composed "
+                             "scan path only (fused/rt not wired)")
+        dmi = DistributedMutableIndex(index, mesh,
+                                      side_capacity=side_capacity)
+        super().__init__(dmi, **kw)
+        self.mesh = mesh
+        self._dcache: dict = {}
+
+    def _dispatch(self, qb, k, mode, nprobe, side):
+        """One padded batch through the cached distributed searcher."""
+        from repro.dist.distributed_index import make_distributed_search
+        fn = self._dcache.get((k, mode, nprobe))
+        if fn is None:
+            local_np = max(1, math.ceil(nprobe / self.index.n_shards))
+            fn = make_distributed_search(
+                self.mesh, local_np, k, mode=mode, metric=self.metric,
+                thres_scale=self.thres_scale, impl=self.impl,
+                rerank=self.FUSED_RERANK_MULT * k if mode == "H2" else 0,
+                with_side=True)
+            self._dcache[(k, mode, nprobe)] = fn
+        # always pass the (possibly empty) replicated side buffer: the
+        # sharded path has ONE signature per knob point, no side=None split
+        return fn(self.index.data, qb, self.index.side)
+
+
+class AnnServeFleet:
+    """Replica-group × shard-group serving fleet over AnnServeEngine.
+
+    See the module docstring for the full semantics. The control surface:
+
+    * :meth:`submit` — route one request (returns a
+      :class:`FleetRequest`; possibly already shed, never raises for
+      load reasons).
+    * :meth:`step` / :meth:`run` — expire deadlined requests, drain the
+      backlog, tick every healthy replica once / until idle.
+    * :meth:`insert` / :meth:`delete` / :meth:`compact` — fan the
+      mutation out to every replica (identical ids asserted).
+    * :meth:`fail_replica` / :meth:`restore_replica` — routing-level
+      failover; queued work is re-admitted to the survivors.
+    * :meth:`latency_summary` — streaming percentiles + segment means +
+      admission counters.
+    """
+
+    POLICIES = ("queue", "shed")
+
+    def __init__(self, index: JunoIndexData, *, n_replicas: int = 2,
+                 shards_per_replica: int = 1, max_queue: int = 1024,
+                 policy: str = "queue",
+                 default_deadline_s: Optional[float] = None,
+                 side_capacity: int = 256, **engine_kw):
+        """Build the fleet topology over a built index.
+
+        Parameters
+        ----------
+        index : JunoIndexData
+            The built index every replica serves (each replica wraps its
+            own mutable copy; arrays are shared until first mutation).
+        n_replicas : int
+            Replica-group count (reads route to one, writes to all).
+        shards_per_replica : int
+            1 → plain single-device engines; > 1 → each replica owns a
+            private sub-mesh of ``shards_per_replica`` devices and
+            serves through the distributed exact-merge path (requires
+            ``n_replicas * shards_per_replica`` visible devices).
+        max_queue : int
+            Per-replica admission bound, in queued query ROWS.
+        policy : str
+            ``"shed"`` — reject (typed, not raised) when every healthy
+            replica is at ``max_queue``; ``"queue"`` — park overflow in
+            a fleet backlog that drains as capacity frees.
+        default_deadline_s : float, optional
+            Relative deadline attached to every request that does not
+            carry its own; expired requests drop before compute.
+        side_capacity : int
+            Side-buffer capacity per replica.
+        **engine_kw
+            Forwarded to every replica's :class:`AnnServeEngine`
+            (``metric``, ``batch_buckets``, ``impl``, ...).
+        """
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}")
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.policy = policy
+        self.max_queue = max_queue
+        self.default_deadline_s = default_deadline_s
+        self.engines: list[AnnServeEngine] = []
+        if shards_per_replica > 1:
+            import jax
+            from jax.sharding import Mesh
+            devs = jax.devices()
+            need = n_replicas * shards_per_replica
+            if len(devs) < need:
+                raise ValueError(
+                    f"{n_replicas}x{shards_per_replica} fleet needs {need} "
+                    f"devices, have {len(devs)} (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={need})")
+            for r in range(n_replicas):
+                mesh = Mesh(np.asarray(
+                    devs[r * shards_per_replica:(r + 1) * shards_per_replica]
+                ), ("data",))
+                self.engines.append(_ShardedAnnServeEngine(
+                    index, mesh, side_capacity=side_capacity, **engine_kw))
+        else:
+            for _ in range(n_replicas):
+                self.engines.append(AnnServeEngine(
+                    index, side_capacity=side_capacity, **engine_kw))
+        self.n_replicas = n_replicas
+        self.shards_per_replica = shards_per_replica
+        self.backlog: collections.deque[FleetRequest] = collections.deque()
+        self.down: set[int] = set()
+        self._by_inner: dict[int, FleetRequest] = {}
+        self._rid = 0
+        self.hist = LatencyHistogram()
+        self.seg = {"queue": 0.0, "compute": 0.0, "merge": 0.0}
+        self.stats = {
+            "submitted": 0, "served": 0, "shed": 0, "expired": 0,
+            "rerouted": 0, "inserts": 0, "deletes": 0, "ticks": 0,
+            "per_replica": [collections.Counter() for _ in range(n_replicas)],
+        }
+
+    # ---- request plane ---------------------------------------------------
+    def outstanding(self, replica: int) -> int:
+        """Queued query rows currently waiting on ``replica``."""
+        return self.engines[replica].queued_rows
+
+    def _pick_replica(self) -> Optional[int]:
+        """Least-outstanding-rows healthy replica (None if all down)."""
+        healthy = [r for r in range(self.n_replicas) if r not in self.down]
+        if not healthy:
+            return None
+        return min(healthy, key=self.outstanding)
+
+    def _place(self, freq: FleetRequest, replica: int) -> None:
+        """Hand a request to a replica engine's queue (first or re-route)."""
+        eng = self.engines[replica]
+        if freq.inner is None:
+            freq.inner = eng.submit(
+                freq.queries, k=freq.k, mode=freq.mode, nprobe=freq.nprobe,
+                recall_target=freq.recall_target)
+        else:
+            eng.queue.append(freq.inner)
+        freq.replica = replica
+        freq.status = "queued"
+        self._by_inner[id(freq.inner)] = freq
+        self.stats["per_replica"][replica]["admitted"] += 1
+
+    def _admit(self, freq: FleetRequest) -> None:
+        """Route/shed/backlog one request per the admission policy."""
+        replica = self._pick_replica()
+        if replica is None:
+            freq.status = "shed"
+            freq.rejection = Rejection("no_replica", "all replicas down")
+            self.stats["shed"] += 1
+            return
+        if self.outstanding(replica) >= self.max_queue:
+            if self.policy == "shed":
+                freq.status = "shed"
+                freq.rejection = Rejection(
+                    "queue_full",
+                    f"least-loaded replica {replica} at max_queue="
+                    f"{self.max_queue} rows")
+                self.stats["shed"] += 1
+            else:
+                self.backlog.append(freq)   # stays status "queued"
+            return
+        self._place(freq, replica)
+
+    def submit(self, queries, *, k: int = 10, mode: str = "auto",
+               nprobe: int = 0, recall_target: float = 0.9,
+               deadline_s: Optional[float] = None,
+               t_arrival: Optional[float] = None) -> FleetRequest:
+        """Route one search request into the fleet.
+
+        Same knobs as :meth:`AnnServeEngine.submit`, plus admission
+        fields. NEVER raises for load reasons: an inadmissible request
+        comes back with ``status="shed"`` and a typed
+        :class:`Rejection`.
+
+        Parameters
+        ----------
+        queries : array-like
+            (q, D) f32 query rows (a single (D,) vector is promoted).
+        k, mode, nprobe, recall_target
+            Engine knobs, forwarded to the serving replica's router.
+        deadline_s : float, optional
+            Relative deadline; overrides the fleet default. A request
+            still queued past its deadline is dropped before compute.
+        t_arrival : float, optional
+            Intended arrival time (``perf_counter`` clock) for open-loop
+            load generation; defaults to now. Latency is measured from
+            this point, so schedule slip counts against the server.
+
+        Returns
+        -------
+        FleetRequest
+            The routed request; poll ``.status`` / ``.ids`` after
+            :meth:`run`.
+        """
+        now = time.perf_counter()
+        dl = self.default_deadline_s if deadline_s is None else deadline_s
+        freq = FleetRequest(
+            rid=self._rid,
+            queries=np.atleast_2d(np.asarray(queries, np.float32)),
+            k=k, mode=mode, nprobe=nprobe, recall_target=recall_target,
+            deadline=None if dl is None else now + dl,
+            t_arrival=now if t_arrival is None else t_arrival)
+        self._rid += 1
+        self.stats["submitted"] += 1
+        self._admit(freq)
+        return freq
+
+    # ---- engine ticks ----------------------------------------------------
+    def _drop_expired(self, freq: FleetRequest) -> None:
+        """Terminal transition for a deadline-expired queued request."""
+        freq.status = "expired"
+        freq.rejection = Rejection("deadline", "expired before compute")
+        if freq.inner is not None:
+            self._by_inner.pop(id(freq.inner), None)
+        self.stats["expired"] += 1
+
+    def _expire(self, now: float) -> None:
+        """Drop queued/backlogged requests whose deadline has passed."""
+        for eng in self.engines:
+            if not eng.queue:
+                continue
+            kept: collections.deque[AnnRequest] = collections.deque()
+            for inner in eng.queue:
+                freq = self._by_inner.get(id(inner))
+                if (freq is not None and freq.deadline is not None
+                        and now > freq.deadline):
+                    self._drop_expired(freq)
+                else:
+                    kept.append(inner)
+            eng.queue = kept
+        if self.backlog:
+            kept_b: collections.deque[FleetRequest] = collections.deque()
+            for freq in self.backlog:
+                if freq.deadline is not None and now > freq.deadline:
+                    self._drop_expired(freq)
+                else:
+                    kept_b.append(freq)
+            self.backlog = kept_b
+
+    def _drain_backlog(self) -> None:
+        """Admit backlogged requests while some replica has capacity."""
+        while self.backlog:
+            replica = self._pick_replica()
+            if replica is None or self.outstanding(replica) >= self.max_queue:
+                return
+            self._place(self.backlog.popleft(), replica)
+
+    def _collect(self, replica: int) -> None:
+        """Fold a replica's completed requests into the fleet metrics."""
+        eng = self.engines[replica]
+        for inner in eng.completed:
+            freq = self._by_inner.pop(id(inner), None)
+            if freq is None:
+                continue
+            freq.status = "done"
+            tr = freq.trace()
+            self.hist.add(tr["total"])
+            for segment in ("queue", "compute", "merge"):
+                self.seg[segment] += tr[segment]
+            self.stats["served"] += 1
+            self.stats["per_replica"][replica]["served"] += 1
+        eng.completed.clear()
+
+    def step(self) -> int:
+        """One fleet tick: expire, drain backlog, tick every replica.
+
+        Deadline expiry runs first, so a request that is already dead on
+        arrival of the tick is dropped before any compute is spent on
+        it. Returns the number of query rows served this tick.
+        """
+        self._expire(time.perf_counter())
+        self._drain_backlog()
+        rows = 0
+        for r, eng in enumerate(self.engines):
+            if r in self.down or not eng.queue:
+                continue
+            rows += eng.step()
+            self._collect(r)
+        self.stats["ticks"] += 1
+        return rows
+
+    @property
+    def pending(self) -> bool:
+        """True while any backlog or healthy-replica queue is non-empty."""
+        return bool(self.backlog) or any(
+            self.engines[r].queue for r in range(self.n_replicas)
+            if r not in self.down)
+
+    def run(self, max_ticks: int = 100_000) -> int:
+        """Tick until the fleet is idle; returns total rows served."""
+        rows = 0
+        for _ in range(max_ticks):
+            if not self.pending:
+                break
+            rows += self.step()
+        return rows
+
+    # ---- failover --------------------------------------------------------
+    def fail_replica(self, replica: int) -> int:
+        """Take a replica out of rotation; re-admit its queued work.
+
+        Routing-level failover: the replica's queued requests are
+        re-routed through normal admission (so they can land on any
+        survivor, or shed if the survivors are saturated under
+        ``policy="shed"``). Because replicas hold identical state, the
+        re-routed requests return exactly the results the failed replica
+        would have produced — pinned in ``tests/test_fleet.py``.
+
+        Returns the number of requests re-admitted.
+        """
+        if replica in self.down:
+            return 0
+        self.down.add(replica)
+        eng = self.engines[replica]
+        moved = list(eng.queue)
+        eng.queue.clear()
+        n = 0
+        for inner in moved:
+            freq = self._by_inner.pop(id(inner), None)
+            if freq is None:
+                continue
+            freq.replica = -1
+            self._admit(freq)
+            n += 1
+        self.stats["rerouted"] += n
+        return n
+
+    def restore_replica(self, replica: int) -> None:
+        """Return a failed replica to the routing rotation."""
+        self.down.discard(replica)
+
+    # ---- mutation plane --------------------------------------------------
+    def insert(self, points) -> list[int]:
+        """Insert a point batch into EVERY replica (identical ids).
+
+        Writes fan out so reads can route anywhere; the deterministic
+        plan-then-commit bookkeeping must assign the same ids on every
+        replica (asserted — divergence means replica state has forked).
+        Down replicas are written too: failover here is a routing state,
+        not state loss.
+        """
+        ids0: Optional[list[int]] = None
+        for r, eng in enumerate(self.engines):
+            ids = eng.insert(points)
+            if ids0 is None:
+                ids0 = ids
+            elif ids != ids0:
+                raise RuntimeError(
+                    f"replica {r} id divergence: {ids[:4]} vs {ids0[:4]}")
+        self.stats["inserts"] += len(ids0)
+        return ids0
+
+    def delete(self, ids) -> int:
+        """Tombstone points by id on every replica; returns the count."""
+        n = 0
+        for eng in self.engines:
+            n = eng.delete(ids)
+        self.stats["deletes"] += n
+        return n
+
+    def compact(self, **kw) -> int:
+        """Run :meth:`AnnServeEngine.compact` on every replica."""
+        return sum(eng.compact(**kw) for eng in self.engines)
+
+    # ---- observability ---------------------------------------------------
+    def latency_summary(self) -> dict:
+        """Streaming latency + admission summary of the fleet.
+
+        Returns
+        -------
+        dict
+            Histogram summary (``n/mean/p50/p95/p99/max`` seconds over
+            *served* requests, measured arrival → done), per-segment
+            means (``queue_mean``/``compute_mean``/``merge_mean``), and
+            the admission counters (``served``/``shed``/``expired``/
+            ``rerouted``).
+        """
+        out = self.hist.summary()
+        served = max(1, self.stats["served"])
+        out.update({f"{k}_mean": v / served for k, v in self.seg.items()})
+        for key in ("served", "shed", "expired", "rerouted"):
+            out[key] = self.stats[key]
+        return out
+
+    def reset_metrics(self) -> None:
+        """Zero the latency histogram, segment sums and counters.
+
+        Engine/jit state and index contents are untouched — benchmarks
+        call this between the warm-up replay and the timed replay.
+        """
+        self.hist = LatencyHistogram()
+        self.seg = {k: 0.0 for k in self.seg}
+        for key in ("submitted", "served", "shed", "expired", "rerouted",
+                    "inserts", "deletes", "ticks"):
+            self.stats[key] = 0
+        for counter in self.stats["per_replica"]:
+            counter.clear()

@@ -15,7 +15,7 @@ import check_links  # noqa: E402
 
 def test_docs_pages_exist():
     for page in ["index.md", "architecture.md", "kernels.md", "serving.md",
-                 "benchmarks.md"]:
+                 "building.md", "fleet.md", "benchmarks.md"]:
         assert os.path.exists(os.path.join(REPO, "docs", page)), page
 
 
@@ -24,3 +24,11 @@ def test_no_dead_intra_repo_links():
     assert any(f.endswith("README.md") for f in files)
     bad = check_links.dead_links(files)
     assert not bad, f"dead links: {bad}"
+
+
+def test_no_orphan_docs_pages():
+    """Every docs page is linked from README/DESIGN/another docs page —
+    existence is not reachability (the docs-check CI job runs the same
+    check standalone via --orphans)."""
+    orphans = check_links.orphan_pages(REPO)
+    assert not orphans, f"orphan docs pages: {orphans}"

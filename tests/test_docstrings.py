@@ -14,11 +14,14 @@ import pytest
 
 import repro.build as build
 import repro.core as core
+import repro.dist.distributed_index as dist_index
 import repro.rt as rt
 from repro.core.juno import MutableIndexBase, MutableJunoIndex
 from repro.dist.distributed_index import DistributedMutableIndex
 from repro.kernels import ops
 from repro.serve.ann import AnnRequest, AnnServeEngine
+from repro.serve.fleet import (AnnServeFleet, FleetRequest, LatencyHistogram,
+                               Rejection)
 
 PUBLIC = [
     # repro.core index lifecycle
@@ -53,6 +56,21 @@ PUBLIC = [
     MutableJunoIndex.swap_data, AnnServeEngine.swap_index,
     DistributedMutableIndex.swap_data,
     DistributedMutableIndex.rebuild_shard, DistributedMutableIndex.rebuild,
+    # distributed search/update factories
+    dist_index.make_distributed_search, dist_index.make_distributed_insert,
+    dist_index.make_distributed_delete,
+    dist_index.make_distributed_row_update, dist_index.index_pspecs,
+    dist_index.shard_index, DistributedMutableIndex,
+    DistributedMutableIndex.searcher,
+    # fleet layer
+    AnnServeFleet, AnnServeFleet.__init__, AnnServeFleet.submit,
+    AnnServeFleet.step, AnnServeFleet.run, AnnServeFleet.insert,
+    AnnServeFleet.delete, AnnServeFleet.compact,
+    AnnServeFleet.fail_replica, AnnServeFleet.restore_replica,
+    AnnServeFleet.latency_summary, AnnServeFleet.reset_metrics,
+    FleetRequest, FleetRequest.trace, Rejection,
+    LatencyHistogram, LatencyHistogram.add, LatencyHistogram.merge,
+    LatencyHistogram.percentile, LatencyHistogram.summary,
 ]
 
 
@@ -79,8 +97,9 @@ def test_public_modules_have_docstrings():
     import repro.rt.grid
     import repro.rt.intersect
     import repro.serve.ann
+    import repro.serve.fleet
     for mod in [core, rt, ops, build, repro.core.juno, repro.serve.ann,
-                repro.rt.grid, repro.rt.intersect, repro.kernels.ref,
-                repro.dist.distributed_index, repro.build.pipeline,
-                repro.build.store, repro.build.rebuild]:
+                repro.serve.fleet, repro.rt.grid, repro.rt.intersect,
+                repro.kernels.ref, repro.dist.distributed_index,
+                repro.build.pipeline, repro.build.store, repro.build.rebuild]:
         assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__

@@ -1,0 +1,274 @@
+"""AnnServeFleet: routing, admission control, failover, latency accounting.
+
+The fleet contract under test: replicas are pure scale-out (results are
+bit-identical to a single-replica run, and to a direct ``search()`` with
+the resolved signature, no matter which replica served a request or how
+many exist), admission failures are typed values (never data-plane
+exceptions), deadline-expired requests cost zero compute, and the
+mutation plane keeps every replica id-identical. Sharded-replica tests
+need >= 4 emulated devices and run in the multidevice CI job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import JunoConfig, build, search
+from repro.data import DEEP_LIKE, make_dataset
+from repro.serve.fleet import AnnServeFleet, LatencyHistogram, Rejection
+
+
+@pytest.fixture(scope="module")
+def served():
+    pts, q = make_dataset(DEEP_LIKE, 3000, 40, key=jax.random.PRNGKey(17))
+    cfg = JunoConfig(n_clusters=16, n_entries=32, calib_queries=16,
+                     kmeans_iters=4, capacity_mult=1.1)
+    return np.asarray(pts), np.asarray(q), build(pts, cfg)
+
+
+def test_fleet_matches_single_replica_and_direct_search(served):
+    """Replica scale-out must not change results: a 3-replica fleet, a
+    1-replica fleet, and a direct search() agree bit-for-bit per request."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=3)
+    solo = AnnServeFleet(idx, n_replicas=1)
+    waves = [(q[:5], dict(k=10, mode="H", nprobe=8)),
+             (q[5:9], dict(k=10, mode="M", nprobe=8)),
+             (q[9:10], dict(k=50, mode="H2")),
+             (q[10:20], dict(k=10, mode="L", nprobe=4))]
+    rf = [fleet.submit(qs, **kw) for qs, kw in waves]
+    rs = [solo.submit(qs, **kw) for qs, kw in waves]
+    assert fleet.run() == solo.run() == 20
+    for req, ref in zip(rf, rs):
+        assert req.done and ref.done
+        np.testing.assert_array_equal(req.ids, ref.ids)
+        np.testing.assert_array_equal(req.scores, ref.scores)
+        eng = fleet.engines[req.replica]
+        k, mode, nprobe = eng.route(req.inner)
+        s, ids = search(idx, req.queries, nprobe=nprobe, k=k, mode=mode,
+                        batch=req.queries.shape[0])
+        np.testing.assert_array_equal(np.asarray(ids)[:, :req.k], req.ids)
+        np.testing.assert_array_equal(np.asarray(s)[:, :req.k], req.scores)
+
+
+def test_least_outstanding_routing(served):
+    """Each submit lands on the emptiest replica: equal-sized requests
+    round-robin across an idle fleet instead of piling onto one engine."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2)
+    for i in range(4):
+        fleet.submit(q[i * 2:(i + 1) * 2], k=10, mode="H", nprobe=8)
+    assert [fleet.outstanding(r) for r in range(2)] == [4, 4]
+    fleet.run()
+    assert all(c["served"] == 2 for c in fleet.stats["per_replica"])
+
+
+def test_queue_full_sheds_typed_rejection(served):
+    """policy="shed" at capacity returns a typed Rejection on the request —
+    no exception, and the shed request costs no compute."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2, max_queue=8, policy="shed")
+    ok = [fleet.submit(q[:8]) for _ in range(2)]   # fills both replicas
+    shed = fleet.submit(q[:8])
+    assert all(r.status == "queued" for r in ok)
+    assert shed.status == "shed" and not shed.done and shed.ids is None
+    assert isinstance(shed.rejection, Rejection)
+    assert shed.rejection.reason == "queue_full"
+    assert fleet.run() == 16                       # only admitted rows ran
+    assert fleet.latency_summary()["shed"] == 1
+
+
+def test_queue_policy_backlogs_and_drains(served):
+    """policy="queue" parks overflow in the fleet backlog instead of
+    shedding, and drains it as replica capacity frees."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2, max_queue=8, policy="queue")
+    reqs = [fleet.submit(q[:8]) for _ in range(4)]
+    assert len(fleet.backlog) == 2
+    fleet.run()
+    assert all(r.done for r in reqs) and not fleet.backlog
+    assert fleet.latency_summary()["shed"] == 0
+
+
+def test_deadline_expires_before_compute(served):
+    """A request whose deadline passes while queued is dropped BEFORE any
+    jitted work: the engine's query counter must stay at zero."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=1, default_deadline_s=0.0)
+    req = fleet.submit(q[:4])
+    live = fleet.submit(q[4:6], deadline_s=60.0)   # per-request override
+    time.sleep(0.005)
+    fleet.run()
+    assert req.status == "expired" and req.rejection.reason == "deadline"
+    assert live.done
+    assert fleet.engines[0].stats["queries"] == 2  # only the live rows ran
+    assert fleet.latency_summary()["expired"] == 1
+
+
+def test_failover_preserves_results(served):
+    """Failing a replica re-routes its queued work to survivors and the
+    answers are exactly what a single-replica run produces."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2)
+    solo = AnnServeFleet(idx, n_replicas=1)
+    rf = [fleet.submit(q[i * 2:(i + 1) * 2], k=10, mode="H", nprobe=8)
+          for i in range(6)]
+    rs = [solo.submit(q[i * 2:(i + 1) * 2], k=10, mode="H", nprobe=8)
+          for i in range(6)]
+    assert fleet.fail_replica(0) == 3              # its queued half moves
+    fleet.run()
+    solo.run()
+    assert all(r.done and r.replica == 1 for r in rf)
+    for req, ref in zip(rf, rs):
+        np.testing.assert_array_equal(req.ids, ref.ids)
+    assert fleet.stats["rerouted"] == 3
+    assert fleet.engines[0].stats["queries"] == 0  # failed replica idle
+    fleet.restore_replica(0)
+    back = fleet.submit(q[:2], k=10, mode="H", nprobe=8)
+    fleet.run()
+    assert back.done and back.replica == 0         # LOR prefers the idle one
+
+
+def test_all_down_sheds_no_replica(served):
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=1)
+    fleet.fail_replica(0)
+    req = fleet.submit(q[:2])
+    assert req.status == "shed" and req.rejection.reason == "no_replica"
+
+
+def test_mutations_fan_out_to_all_replicas(served):
+    """insert/delete hit every replica with identical ids, so a query routed
+    anywhere — including a replica that was 'down' during the write — sees
+    the mutation."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2)
+    rng = np.random.default_rng(2)
+    newpts = (q[:4] + 0.03 * rng.standard_normal(q[:4].shape)
+              ).astype(np.float32)
+    fleet.fail_replica(1)                          # writes still land on it
+    ids = fleet.insert(newpts)
+    fleet.restore_replica(1)
+    fleet.fail_replica(0)                          # force reads onto 1
+    req = fleet.submit(newpts, k=10, mode="H", nprobe=16)
+    fleet.run()
+    assert req.replica == 1
+    assert all(ids[j] in req.ids[j] for j in range(4))
+    fleet.restore_replica(0)
+    assert fleet.delete(ids[:2]) == 2
+    req2 = fleet.submit(newpts[:2], k=10, mode="H", nprobe=16)
+    fleet.run()
+    assert all(ids[j] not in req2.ids[j] for j in range(2))
+
+
+def test_trace_timestamps_ordered(served):
+    """Served requests carry a monotone arrival→batch→compute→done chain and
+    the histogram absorbs exactly the served count."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2)
+    reqs = [fleet.submit(q[i:i + 1]) for i in range(6)]
+    fleet.run()
+    for req in reqs:
+        tr = req.trace()
+        assert set(tr) == {"queue", "compute", "merge", "total"}
+        assert all(v >= 0 for v in tr.values())
+        assert tr["total"] >= tr["compute"]
+    summ = fleet.latency_summary()
+    assert summ["n"] == summ["served"] == 6
+    assert summ["p50"] <= summ["p95"] <= summ["p99"] <= summ["max"]
+    fleet.reset_metrics()
+    assert fleet.latency_summary()["n"] == 0
+
+
+def test_latency_histogram_percentiles():
+    """Log-bucketed percentile is a <=10% over-estimate (upper bucket edge),
+    never an under-estimate, and merge is exact on the counts."""
+    h = LatencyHistogram()
+    vals = [10 ** (i / 250.0 - 4) for i in range(1000)]   # 100us..1s sweep
+    for v in vals:
+        h.add(v)
+    exact = np.quantile(vals, [0.5, 0.95, 0.99])
+    for p, e in zip([0.5, 0.95, 0.99], exact):
+        got = h.percentile(p)
+        assert e <= got <= e * 1.11, (p, e, got)
+    assert h.percentile(1.0) == h.max == max(vals)
+    h2 = LatencyHistogram()
+    h2.add(5.0)                     # above hi=500? no — in range
+    h2.merge(h)
+    assert h2.n == 1001 and h2.max == 5.0
+    assert LatencyHistogram().summary()["n"] == 0
+    with pytest.raises(ValueError):
+        h.merge(LatencyHistogram(bins_per_decade=10))
+
+
+def test_histogram_overflow_clamps_to_max():
+    h = LatencyHistogram(lo=1e-3, hi=1.0)
+    h.add(50.0)                     # overflow bucket
+    assert h.percentile(0.99) == 50.0
+
+
+# ---- sharded replicas (>= 4 emulated devices; multidevice CI job) --------
+needs4 = pytest.mark.skipif(jax.device_count() < 4,
+                            reason="needs >=4 devices "
+                                   "(xla_force_host_platform_device_count)")
+
+
+@needs4
+def test_sharded_fleet_replica_invariance(served):
+    """2 replicas x 2 shards and 1 replica x 2 shards agree bit-for-bit:
+    the replica dimension never changes results, only capacity."""
+    _, q, idx = served
+    f22 = AnnServeFleet(idx, n_replicas=2, shards_per_replica=2,
+                        batch_buckets=(8, 16))
+    f12 = AnnServeFleet(idx, n_replicas=1, shards_per_replica=2,
+                        batch_buckets=(8, 16))
+    for f in (f22, f12):
+        assert f.engines[0].index.n_shards == 2
+    r22 = [f22.submit(q[i * 4:(i + 1) * 4], k=10, mode="M", nprobe=8)
+           for i in range(3)]
+    r12 = [f12.submit(q[i * 4:(i + 1) * 4], k=10, mode="M", nprobe=8)
+           for i in range(3)]
+    assert f22.run() == f12.run() == 12
+    for a, b in zip(r22, r12):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+@needs4
+def test_sharded_fleet_full_coverage_matches_unsharded(served):
+    """At full probe coverage (nprobe = n_clusters) the per-shard budget
+    scans every cluster, so the exact merge reproduces unsharded search
+    bit-for-bit — sharding is pure partitioning, not approximation."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2, shards_per_replica=2,
+                          batch_buckets=(8, 16))
+    req = fleet.submit(q[:8], k=10, mode="H", nprobe=16)
+    fleet.run()
+    s, ids = search(idx, q[:8], nprobe=16, k=10, mode="H", batch=8)
+    np.testing.assert_array_equal(np.asarray(ids), req.ids)
+    np.testing.assert_array_equal(np.asarray(s), req.scores)
+
+
+@needs4
+def test_sharded_fleet_insert_visible(served):
+    """Inserts fan out through the routed scatter on every replica's
+    sub-mesh and are immediately servable (side-buffer path included)."""
+    _, q, idx = served
+    fleet = AnnServeFleet(idx, n_replicas=2, shards_per_replica=2,
+                          batch_buckets=(8, 16))
+    rng = np.random.default_rng(3)
+    newpts = (q[:4] + 0.03 * rng.standard_normal(q[:4].shape)
+              ).astype(np.float32)
+    ids = fleet.insert(newpts)
+    req = fleet.submit(newpts, k=10, mode="H", nprobe=16)
+    fleet.run()
+    assert all(ids[j] in req.ids[j] for j in range(4))
+
+
+@needs4
+def test_sharded_fleet_rejects_unwired_paths(served):
+    _, _, idx = served
+    with pytest.raises(ValueError, match="scan path only"):
+        AnnServeFleet(idx, n_replicas=1, shards_per_replica=2, fused=True)

@@ -7,10 +7,14 @@ the containing file. External schemes (http/https/mailto) and pure
 in-page anchors (``#...``) are skipped; a ``path#anchor`` target is
 checked for the path part only.
 
-    python tools/check_links.py [FILES...]
+With ``--orphans`` it additionally fails on ORPHAN docs pages: a page
+under ``docs/`` that no other scanned markdown file links to (every page
+must be reachable from the docs site, not just exist).
 
-Exit code = number of dead links. Also runnable in-process
-(tests/test_docs_links.py) so the guarantee holds in tier 1.
+    python tools/check_links.py [--orphans] [FILES...]
+
+Exit code = number of dead links (+ orphan pages). Also runnable
+in-process (tests/test_docs_links.py) so the guarantee holds in tier 1.
 """
 from __future__ import annotations
 
@@ -66,15 +70,63 @@ def default_files(root: str | None = None) -> list[str]:
     return [f for f in files if os.path.exists(f)]
 
 
+def orphan_pages(root: str | None = None) -> list[str]:
+    """Return docs pages no other scanned markdown file links to.
+
+    A page in ``docs/`` must be REACHABLE — linked from README.md,
+    DESIGN.md, or another docs page — not merely present. ``index.md``
+    is the root of the docs site and is exempt (README links it).
+
+    Parameters
+    ----------
+    root : str, optional
+        Repo root (default: inferred from this file's location).
+
+    Returns
+    -------
+    list of str
+        Absolute paths of orphan pages, sorted.
+    """
+    root = root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = default_files(root)
+    linked: set[str] = set()
+    for path in files:
+        base = os.path.dirname(os.path.abspath(path))
+        with open(path, encoding="utf-8") as fh:
+            for line in fh:
+                for target in _LINK.findall(line):
+                    if target.startswith(_SKIP_SCHEMES + ("#",)):
+                        continue
+                    rel = target.split("#", 1)[0]
+                    if not rel:
+                        continue
+                    dest = os.path.normpath(os.path.join(base, rel))
+                    if dest != os.path.normpath(os.path.abspath(path)):
+                        linked.add(dest)    # self-links don't count
+    docs_dir = os.path.join(root, "docs")
+    return sorted(
+        page for page in glob.glob(os.path.join(docs_dir, "*.md"))
+        if os.path.normpath(os.path.abspath(page)) not in linked
+        and os.path.basename(page) != "index.md")
+
+
 def main(argv: list[str]) -> int:
-    """CLI entry point; returns the number of dead links found."""
+    """CLI entry point; returns dead links + (with --orphans) orphan pages."""
+    check_orphans = "--orphans" in argv
+    argv = [a for a in argv if a != "--orphans"]
     files = argv or default_files()
     bad = dead_links(files)
     for path, lineno, target in bad:
         print(f"{path}:{lineno}: dead link -> {target}")
+    n_bad = len(bad)
+    if check_orphans:
+        orphans = orphan_pages()
+        for page in orphans:
+            print(f"{page}: orphan docs page (linked from nowhere)")
+        n_bad += len(orphans)
     print(f"checked {len(files)} files: "
-          f"{'OK' if not bad else f'{len(bad)} dead link(s)'}")
-    return len(bad)
+          f"{'OK' if not n_bad else f'{n_bad} problem(s)'}")
+    return n_bad
 
 
 if __name__ == "__main__":
