@@ -37,15 +37,29 @@ the backlog blow-up that bounded admission exists to cap. ``--json-
 fleet`` records the numbers (committed as BENCH_fleet.json); see
 docs/fleet.md for the methodology.
 
+A fifth section exercises the PAGED (out-of-core) tier: the bench index
+is committed to a throwaway ``ArtifactStore`` generation and served back
+through ``repro.serve.paged.PagedAnnServeEngine`` — memory-mapped PQ code
+shards behind an LRU hot-cluster cache sized to 1/4 of the shard bytes,
+so the dataset is structurally >= 4x the cache and eviction pressure is
+real. Gates, under ``--check``/``--smoke``: the paged engine returns
+bit-identical ids to a resident engine over the full mixed-tier trace,
+the cache actually evicts, and paged QPS stays above a floor (>= 0.25x
+resident — paging trades throughput for footprint, bounded). ``--json-
+paged`` records the numbers (committed as BENCH_paged.json), including
+the exact-rerank tier's recall@10 uplift from the raw-vector file.
+
     PYTHONPATH=src python benchmarks/serve_qps.py [--smoke] [--json PATH]
-        [--json-rt PATH] [--json-fleet PATH]
+        [--json-rt PATH] [--json-fleet PATH] [--json-paged PATH]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import shutil
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -60,9 +74,11 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 from benchmarks import common  # noqa: E402
+from repro.build.store import ArtifactStore  # noqa: E402
 from repro.core import search  # noqa: E402
 from repro.serve.ann import AnnServeEngine  # noqa: E402
 from repro.serve.fleet import AnnServeFleet  # noqa: E402
+from repro.serve.paged import PagedAnnServeEngine, PagedIndexData  # noqa: E402
 
 # request trace knobs: (n_queries, k, mode, recall_target) cycled over
 REQUEST_MIX = [
@@ -308,6 +324,105 @@ def run_rt_prefilter(n_requests: int = 96) -> dict:
     return {"dataset": "tti", "speedup": speedup, **out}
 
 
+def run_paged(n_requests: int = 96, exact_rerank: int = 40) -> dict:
+    """Paged (out-of-core) vs resident serving of the mixed-tier trace.
+
+    Commits the bench index to a throwaway ``ArtifactStore`` generation,
+    reopens it memory-mapped with a hot-cluster cache of 1/4 the PQ
+    shard bytes (dataset >= 4x cache by construction), and replays the
+    same mixed-mode trace through a ``PagedAnnServeEngine`` and a
+    resident ``AnnServeEngine``. The paged engine must return the
+    resident engine's ids bit-for-bit (the scoring tail is shared code,
+    so this is an equality — not a tolerance — gate), must actually
+    evict (otherwise the 4x pressure claim is vacuous), and must hold
+    >= 0.25x resident QPS. Timing is the median of 3 interleaved
+    passes. The exact-rerank tier's recall@10 against the raw-vector
+    file is recorded alongside (informational — it trades extra reads
+    for exact final ordering).
+    """
+    pts, queries, index, gt, cfg = common.get_bench_index("deep")
+    queries = np.asarray(queries)
+    gt10 = np.asarray(gt)[:, :10]
+    trace = _make_trace(queries, n_requests)
+    total_q = sum(t[0].shape[0] for t in trace)
+
+    tmp = tempfile.mkdtemp(prefix="bench_paged_")
+    try:
+        store = ArtifactStore(tmp)
+        version = store.put("bench", index, cfg)
+        vec_path = os.path.join(tmp, "vectors.npy")
+        np.save(vec_path, np.asarray(pts, np.float32))
+        cluster_bytes = int(np.asarray(index.cluster_codes).nbytes)
+        cache_bytes = max(1, cluster_bytes // 4)      # dataset >= 4x cache
+        paged = PagedIndexData(store.path("bench", version),
+                               cache_bytes=cache_bytes, expect_config=cfg,
+                               vectors=vec_path)
+
+        engines = {
+            "resident": AnnServeEngine(index, metric=cfg.metric,
+                                       batch_buckets=(8, 16, 32)),
+            "paged": PagedAnnServeEngine(paged, metric=cfg.metric,
+                                         batch_buckets=(8, 16, 32)),
+        }
+        # warm every signature+bucket AND check id parity request-by-request
+        reqs = {}
+        for name, eng in engines.items():
+            for _ in range(2):
+                for (q, k, m, t) in trace:
+                    eng.submit(q, k=k, mode=m, recall_target=t)
+                eng.run()
+            reqs[name] = [eng.submit(q, k=k, mode=m, recall_target=t)
+                          for (q, k, m, t) in trace]
+            eng.run()
+        ids_equal = all(np.array_equal(rp.ids, rr.ids) for rp, rr
+                        in zip(reqs["paged"], reqs["resident"]))
+
+        times = {name: [] for name in engines}
+        # interleave the timed passes (same rationale as run_rt_prefilter)
+        for _ in range(3):
+            for name, eng in engines.items():
+                t0 = time.perf_counter()
+                for (q, k, m, t) in trace:
+                    eng.submit(q, k=k, mode=m, recall_target=t)
+                eng.run()
+                times[name].append(time.perf_counter() - t0)
+        qps = {name: total_q / sorted(ts)[1] for name, ts in times.items()}
+        ratio = qps["paged"] / qps["resident"]
+        cache = engines["paged"].cache_stats()
+
+        # exact-rerank tier: same paged generation, final top-C re-scored
+        # against the memory-mapped raw vectors (recall uplift on record)
+        recall = {}
+        for name, eng in [
+                ("paged", engines["paged"]),
+                ("rerank", PagedAnnServeEngine(paged, metric=cfg.metric,
+                                               exact_rerank=exact_rerank,
+                                               batch_buckets=(8, 16, 32)))]:
+            req = eng.submit(queries, k=10, mode="H2")
+            eng.run()
+            hits = (req.ids[:, :, None] == gt10[:, None, :]).any(-1)
+            recall[name] = float(hits.mean())
+
+        gate_ok = (ids_equal and cache["evictions"] > 0 and ratio >= 0.25)
+        common.emit("serve_qps.paged_tier", 0.0,
+                    f"paged_qps={qps['paged']:.0f};"
+                    f"resident_qps={qps['resident']:.0f};ratio={ratio:.2f}x;"
+                    f"ids_equal={ids_equal};evictions={cache['evictions']};"
+                    f"hit_rate={cache['hits'] / max(1, cache['hits'] + cache['misses']):.2f};"
+                    f"recall10={recall['paged']:.3f};"
+                    f"rerank_recall10={recall['rerank']:.3f};"
+                    f"gate={'OK' if gate_ok else 'FAIL'}")
+        return {"paged_qps": qps["paged"], "resident_qps": qps["resident"],
+                "qps_ratio": ratio, "qps_floor": 0.25,
+                "ids_equal": ids_equal, "cluster_bytes": cluster_bytes,
+                "cache_bytes": cache_bytes,
+                "dataset_over_cache": cluster_bytes / cache_bytes,
+                "cache": cache, "exact_rerank": exact_rerank,
+                "recall10": recall, "gate_ok": gate_ok}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 # fleet traffic: (n_queries,) request sizes cycled over, all on ONE jit
 # signature (k=10, mode "M", nprobe 8) so the tail measures queueing and
 # batching — not compile blips or mode mix — under overload
@@ -506,6 +621,8 @@ def main() -> int:
                     help="write rt-prefilter vs dense-scan numbers here")
     ap.add_argument("--json-fleet", default=None, metavar="PATH",
                     help="write fleet tail-latency numbers here")
+    ap.add_argument("--json-paged", default=None, metavar="PATH",
+                    help="write paged-vs-resident serving numbers here")
     args = ap.parse_args()
     if args.smoke:
         common.set_smoke_sizes()
@@ -534,6 +651,20 @@ def main() -> int:
               f"(shed {pres['bounded']['shed']}) -> "
               f"{'OK' if pres['gate_ok'] else 'REGRESSION'}",
               file=sys.stderr)
+    paged_res = run_paged(n_requests=args.n_requests)
+    paged_ok = paged_res["gate_ok"]
+    print(f"# paged tier {paged_res['paged_qps']:.0f} QPS vs resident "
+          f"{paged_res['resident_qps']:.0f} QPS "
+          f"({paged_res['qps_ratio']:.2f}x, ids_equal="
+          f"{paged_res['ids_equal']}, evictions="
+          f"{paged_res['cache']['evictions']}) -> "
+          f"{'OK' if paged_ok else 'REGRESSION'}", file=sys.stderr)
+    if args.json_paged:
+        with open(args.json_paged, "w") as fh:
+            json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
+                       "dataset": "deep", **paged_res},
+                      fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if args.json_fleet:
         with open(args.json_fleet, "w") as fh:
             json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
@@ -554,7 +685,7 @@ def main() -> int:
                        **res["fused"]}, fh, indent=2, sort_keys=True)
             fh.write("\n")
     if (args.check or args.smoke) and not (ok and fused_ok and rt_ok
-                                           and fleet_ok):
+                                           and fleet_ok and paged_ok):
         return 1
     return 0
 

@@ -9,24 +9,33 @@ together) and ``manifest.json`` (schema version, the full
 N/C/P/S/E shape summary, and a per-array sha256/shape/dtype table for
 integrity verification).
 
-Loads are fail-closed: a schema-version mismatch, a config-hash mismatch
-against the caller's expected config, a missing/extra array, or a
-checksum mismatch all raise :class:`ArtifactError` before any partially
-valid index can reach serving.
+Loads are fail-closed at three explicit verification levels
+(:func:`load_index`'s ``verify``): ``"full"`` re-digests every array,
+``"manifest"`` validates the array set/shapes/dtypes without reading
+data (the default for memory-mapped loads, whose per-cluster integrity
+is then enforced on first touch by ``repro.serve.paged``), and
+``"never"`` checks only schema version and config hash. At every level a
+schema-version mismatch or a config-hash mismatch against the caller's
+expected config raises :class:`ArtifactError` before any partially valid
+index can reach serving.
 
 :class:`ArtifactStore` layers generation management on top: each ``put``
-writes a fresh ``<root>/<name>/v<NNNN>`` directory (written to a temp
-path, then atomically renamed), so a serving process can keep reading
-``latest`` while the next generation lands — the storage half of the
-zero-downtime rebuild story (``repro.build.rebuild``).
+writes a fresh ``<root>/<name>/v<NNNN>`` directory (written to a unique
+temp path, fsynced, then atomically renamed with retry when a concurrent
+writer claims the same generation), so a serving process can keep
+reading ``latest`` while the next generation lands — the storage half of
+the zero-downtime rebuild story (``repro.build.rebuild``).
 """
 from __future__ import annotations
 
 import dataclasses
+import errno
 import hashlib
 import json
 import os
 import shutil
+import uuid
+import zipfile
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -81,15 +90,16 @@ def _flatten_index(data: JunoIndexData) -> dict[str, np.ndarray]:
     return out
 
 
-def _unflatten_index(arr: dict[str, np.ndarray]) -> JunoIndexData:
-    pick = lambda g, t: t(**{f: jnp.asarray(arr[f"{g}.{f}"])  # noqa: E731
+def _unflatten_index(arr: dict[str, np.ndarray],
+                     convert=jnp.asarray) -> JunoIndexData:
+    pick = lambda g, t: t(**{f: convert(arr[f"{g}.{f}"])  # noqa: E731
                              for f in t._fields})
     return JunoIndexData(
         ivf=pick("ivf", IVFIndex), codebook=pick("codebook", PQCodebook),
         density=pick("density", DensityModel),
-        codes=jnp.asarray(arr["codes"]),
-        cluster_codes=jnp.asarray(arr["cluster_codes"]),
-        points_sq=jnp.asarray(arr["points_sq"]))
+        codes=convert(arr["codes"]),
+        cluster_codes=convert(arr["cluster_codes"]),
+        points_sq=convert(arr["points_sq"]))
 
 
 def config_hash(config: JunoConfig) -> str:
@@ -111,6 +121,22 @@ def config_hash(config: JunoConfig) -> str:
 
 def _array_digest(a: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_artifact(path: str) -> None:
+    """Force an artifact's files, then its directory entry, to disk."""
+    for fname in (_ARRAYS, _MANIFEST):
+        with open(os.path.join(path, fname), "rb") as fh:
+            os.fsync(fh.fileno())
+    _fsync_dir(path)
 
 
 def save_index(path: str, data: JunoIndexData, config: JunoConfig, *,
@@ -157,6 +183,11 @@ def save_index(path: str, data: JunoIndexData, config: JunoConfig, *,
                        "sha256": _array_digest(v)}
                    for k, v in arrays.items()},
     }
+    # Per-cluster digests let the paged backend (repro.serve.paged) verify
+    # each cluster_codes row on first touch without reading the whole shard
+    # — the mmap-friendly half of the fail-closed contract.
+    manifest["arrays"]["cluster_codes"]["sha256_rows"] = [
+        _array_digest(row) for row in arrays["cluster_codes"]]
     os.makedirs(path, exist_ok=True)
     np.savez(os.path.join(path, _ARRAYS), **arrays)
     with open(os.path.join(path, _MANIFEST), "w") as fh:
@@ -187,8 +218,51 @@ def _load_arrays(path: str) -> dict[str, np.ndarray]:
         return {k: z[k] for k in z.files}
 
 
+def _mmap_arrays(path: str) -> dict[str, np.ndarray]:
+    """Memory-map every member of ``arrays.npz`` without reading data.
+
+    ``np.savez`` stores members uncompressed (ZIP_STORED), so each
+    embedded ``.npy`` is a contiguous byte range of the archive: parse
+    the zip local file header to find the member's data offset, read the
+    npy header for shape/dtype/order, and hand the payload range to
+    ``np.memmap``. Raises :class:`ArtifactError` on compressed or
+    object-dtype members (neither is produced by :func:`save_index`).
+    """
+    apath = os.path.join(path, _ARRAYS)
+    if not os.path.exists(apath):
+        raise ArtifactError(f"no array bundle at {apath}")
+    out: dict[str, np.ndarray] = {}
+    with zipfile.ZipFile(apath) as zf, open(apath, "rb") as fh:
+        for info in zf.infolist():
+            if info.compress_type != zipfile.ZIP_STORED:
+                raise ArtifactError(
+                    f"{info.filename}: compressed member cannot be "
+                    f"memory-mapped ({apath})")
+            fh.seek(info.header_offset)
+            hdr = fh.read(30)  # fixed part of the zip local file header
+            n_name = int.from_bytes(hdr[26:28], "little")
+            n_extra = int.from_bytes(hdr[28:30], "little")
+            fh.seek(info.header_offset + 30 + n_name + n_extra)
+            version = np.lib.format.read_magic(fh)
+            if version == (1, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_1_0(fh)
+            else:
+                shape, fortran, dtype = np.lib.format.read_array_header_2_0(fh)
+            if dtype.hasobject:
+                raise ArtifactError(
+                    f"{info.filename}: object dtype cannot be memory-mapped "
+                    f"({apath})")
+            name = info.filename
+            if name.endswith(".npy"):
+                name = name[:-4]
+            out[name] = np.memmap(apath, dtype=dtype, mode="r",
+                                  offset=fh.tell(), shape=shape,
+                                  order="F" if fortran else "C")
+    return out
+
+
 def _check_arrays(manifest: dict, arrays: dict[str, np.ndarray],
-                  path: str) -> None:
+                  path: str, *, digests: bool = True) -> None:
     names = set(arrays)
     listed = set(manifest["arrays"])
     if names != listed:
@@ -201,7 +275,12 @@ def _check_arrays(manifest: dict, arrays: dict[str, np.ndarray],
             raise ArtifactError(
                 f"{name}: stored {a.shape}/{a.dtype} != manifest "
                 f"{meta['shape']}/{meta['dtype']} ({path})")
-        if _array_digest(a) != meta["sha256"]:
+        rows = meta.get("sha256_rows")
+        if rows is not None and len(rows) != meta["shape"][0]:
+            raise ArtifactError(
+                f"{name}: {len(rows)} per-row digests for "
+                f"{meta['shape'][0]} rows ({path})")
+        if digests and _array_digest(a) != meta["sha256"]:
             raise ArtifactError(f"{name}: checksum mismatch ({path})")
 
 
@@ -232,8 +311,22 @@ def verify_artifact(path: str) -> dict:
     return manifest
 
 
+def _normalize_verify(verify, mmap_mode) -> str:
+    if verify is None:
+        return "manifest" if mmap_mode else "full"
+    if verify is True:
+        return "full"
+    if verify is False:
+        return "manifest"
+    if verify in ("full", "manifest", "never"):
+        return verify
+    raise ValueError(f"verify must be 'full', 'manifest' or 'never', "
+                     f"got {verify!r}")
+
+
 def load_index(path: str, *, expect_config: JunoConfig | None = None,
-               verify: bool = True) -> LoadedIndex:
+               verify: bool | str | None = None,
+               mmap_mode: str | None = None) -> LoadedIndex:
     """Load a persisted index artifact, fail-closed.
 
     Parameters
@@ -244,10 +337,24 @@ def load_index(path: str, *, expect_config: JunoConfig | None = None,
         When given, the artifact's config hash must match this config's
         (guards a serving process against loading an index built with
         different knobs).
-    verify : bool
-        Run the full :func:`verify_artifact` integrity pass (default).
-        ``False`` skips checksums but still checks schema version and
-        config hash.
+    verify : {"full", "manifest", "never"} or bool, optional
+        How much integrity checking to do before the index is handed
+        out. ``"full"`` (the default for resident loads) re-digests
+        every array against the manifest sha256 table — O(index bytes).
+        ``"manifest"`` (the default for ``mmap_mode`` loads, and what
+        ``False`` maps to) validates the array set, shapes and dtypes
+        without reading array data, leaving per-cluster digests to be
+        enforced on first touch by the paged backend
+        (``repro.serve.paged``). ``"never"`` checks only schema version
+        and config hash. ``True`` maps to ``"full"``. All three levels
+        are fail-closed: anything they do check raises
+        :class:`ArtifactError` rather than degrading.
+    mmap_mode : {"r"}, optional
+        When ``"r"``, arrays are returned as read-only ``np.memmap``
+        views into ``arrays.npz`` instead of device arrays — no array
+        data is read at load time. Callers (the paged serving tier)
+        promote the small metadata arrays to device and demand-page the
+        rest.
 
     Returns
     -------
@@ -259,6 +366,9 @@ def load_index(path: str, *, expect_config: JunoConfig | None = None,
     ArtifactError
         On version, config-hash, or integrity mismatch.
     """
+    if mmap_mode not in (None, "r"):
+        raise ValueError(f"mmap_mode must be None or 'r', got {mmap_mode!r}")
+    mode = _normalize_verify(verify, mmap_mode)
     manifest = _read_manifest(path)
     config = JunoConfig(**manifest["config"])
     if manifest.get("config_hash") != config_hash(config):
@@ -269,9 +379,14 @@ def load_index(path: str, *, expect_config: JunoConfig | None = None,
         raise ArtifactError(
             f"config hash mismatch: expected {config_hash(expect_config)}, "
             f"artifact has {manifest['config_hash']} ({path})")
-    arrays = _load_arrays(path)   # single read: verification hashes the
-    if verify:                    # same in-memory arrays the index is
-        _check_arrays(manifest, arrays, path)  # built from
+    if mmap_mode == "r":
+        arrays = _mmap_arrays(path)     # no data read; "full" would page
+        convert = lambda a: a           # noqa: E731 — keep the mmap views
+    else:
+        arrays = _load_arrays(path)     # single read: verification hashes
+        convert = jnp.asarray           # what the index is built from
+    if mode != "never":
+        _check_arrays(manifest, arrays, path, digests=mode == "full")
     rt_grid = None
     if manifest.get("rt_grid"):
         from repro.rt import CentroidGrid
@@ -281,7 +396,7 @@ def load_index(path: str, *, expect_config: JunoConfig | None = None,
     else:
         arrays = {k: v for k, v in arrays.items()
                   if not k.startswith(_RT_PREFIX)}
-    return LoadedIndex(data=_unflatten_index(arrays), config=config,
+    return LoadedIndex(data=_unflatten_index(arrays, convert), config=config,
                        manifest=manifest, rt_grid=rt_grid)
 
 
@@ -362,8 +477,20 @@ class ArtifactStore:
         return vs[-1] if vs else None
 
     def put(self, name: str, data: JunoIndexData, config: JunoConfig, *,
-            rt_grid=None, extra: dict | None = None) -> int:
-        """Commit a new generation of ``name`` atomically.
+            rt_grid=None, extra: dict | None = None,
+            max_attempts: int = 32) -> int:
+        """Commit a new generation of ``name`` atomically and durably.
+
+        The artifact is written once to a unique temp directory (never
+        visible to :meth:`versions`), fsynced file-by-file plus the
+        directory entry, then renamed onto the next free generation.
+        ``os.rename`` onto an existing committed generation fails
+        (exclusive-create semantics), in which case another writer won
+        that number and the rename retries with the next one — two
+        racing writers commit two distinct generations instead of one
+        clobbering the other. The parent directory is fsynced after the
+        rename so a crash cannot surface a renamed-but-unsynced
+        generation.
 
         Parameters
         ----------
@@ -371,21 +498,43 @@ class ArtifactStore:
             Artifact name.
         data, config, rt_grid, extra
             Forwarded to :func:`save_index`.
+        max_attempts : int
+            Rename retries before giving up (each consumed only by a
+            concurrent writer committing the contended generation).
 
         Returns
         -------
         int
             The committed generation number.
+
+        Raises
+        ------
+        ArtifactError
+            When ``max_attempts`` generations were contended.
         """
-        version = (self.latest(name) or 0) + 1
-        final = self.path(name, version)
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        save_index(tmp, data, config, rt_grid=rt_grid, extra=extra)
-        os.makedirs(os.path.dirname(final), exist_ok=True)
-        os.rename(tmp, final)
-        return version
+        d = os.path.join(self.root, name)
+        os.makedirs(d, exist_ok=True)
+        tmp = os.path.join(d, f".tmp-{os.getpid()}-{uuid.uuid4().hex[:8]}")
+        try:
+            save_index(tmp, data, config, rt_grid=rt_grid, extra=extra)
+            _fsync_artifact(tmp)
+            for _ in range(max_attempts):
+                version = (self.latest(name) or 0) + 1
+                final = self.path(name, version)
+                try:
+                    os.rename(tmp, final)
+                except OSError as e:
+                    if e.errno not in (errno.EEXIST, errno.ENOTEMPTY,
+                                       errno.ENOTDIR, errno.EISDIR):
+                        raise
+                    continue  # lost the race for this generation number
+                _fsync_dir(d)
+                return version
+            raise ArtifactError(
+                f"could not commit a generation of {name!r} after "
+                f"{max_attempts} contended attempts")
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
 
     def get(self, name: str, version: int | None = None, **kw) -> LoadedIndex:
         """Load one generation of ``name`` (default: the latest).
@@ -398,7 +547,7 @@ class ArtifactStore:
             Generation to load (default :meth:`latest`).
         **kw
             Forwarded to :func:`load_index` (``expect_config``,
-            ``verify``).
+            ``verify``, ``mmap_mode``).
 
         Returns
         -------

@@ -248,31 +248,28 @@ def _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset):
     return probe_ok.at[:, 0].set(True)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("nprobe", "k", "mode", "metric", "impl",
-                                    "prefilter"))
-def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
-                  k: int, mode: str, metric: str, thres_scale: float,
-                  impl: str = "ref", side: SideBuffer | None = None,
-                  prefilter: str = "scan", rt_grid=None,
-                  rt_scale: float = 1.0, rt_offset=None):
-    """One jitted query batch. Returns (scores (Q,k), ids (Q,k)).
+def _score_probed(index: JunoIndexData, q: jnp.ndarray, base: jnp.ndarray,
+                  cids: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray,
+                  ids: jnp.ndarray, *, k: int, mode: str, metric: str,
+                  thres_scale: float, impl: str = "ref",
+                  side: SideBuffer | None = None, prefilter: str = "scan",
+                  rt_grid=None, rt_scale: float = 1.0, rt_offset=None):
+    """Stages B+C over an explicitly gathered probe set.
 
-    impl="ref"    — pure-jnp reference path (semantics of record)
-    impl="pallas" — fused Pallas kernels (TPU path; interpret=True on CPU)
-    side          — optional overflow buffer of online inserts, merged into
-                    the final top-k with in-cluster-identical scoring.
-    prefilter     — "scan" (dense, every probed cluster scanned) or "rt"
-                    (RT-core-style sphere-intersection pruning: probes
-                    whose cluster disc the query sphere misses are masked
-                    out of the scans; needs ``rt_grid``, see ``repro.rt``).
+    The tail of :func:`_search_batch` with the stage-A cluster filter and
+    the per-probe gathers hoisted out: ``base``/``cids`` (Q, np) come from
+    :func:`~repro.core.ivf.filter_clusters`, and ``codes`` (Q, np, P, S) /
+    ``valid`` (Q, np, P) / ``ids`` (Q, np, P) are the probed rows of
+    ``cluster_codes`` / ``ivf.valid`` / ``ivf.point_ids`` — however the
+    caller obtained them. The resident path gathers them on device;
+    the paged backend (``repro.serve.paged``) gathers codes on the host
+    through its cluster cache and feeds them in, so both paths share this
+    scoring math verbatim. Only ``index.codebook`` and ``index.density``
+    are read from ``index``. Returns (scores (Q, k), ids (Q, k)).
     """
-    q = queries.astype(jnp.float32)
     nq = q.shape[0]
+    nprobe = cids.shape[1]
     m = index.codebook.sub_dim
-
-    # --- stage A: filtering (MXU GEMM + top-k), paper Fig. 1 bottom-left ---
-    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe, metric=metric)
 
     # --- stage B: selective LUT construction (the RT-core stage) ---------
     if metric == "l2":
@@ -286,9 +283,6 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
     tau = density_lib.predict_threshold(index.density, qsub, thres_scale)
 
     # --- stage C: distance calculation over the selected clusters --------
-    codes = index.cluster_codes[cids]                            # (Q, np, P, S)
-    valid = index.ivf.valid[cids]                                # (Q, np, P)
-    ids = index.ivf.point_ids[cids]                              # (Q, np, P)
     if prefilter == "rt":
         probe_ok = _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset)
         valid = valid & probe_ok[..., None]
@@ -364,10 +358,43 @@ def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
     return out_scores, out_ids
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric", "impl",
-                                             "rerank", "fused", "prefilter"))
-def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
-                            nprobe: int, k: int, metric: str,
+@functools.partial(jax.jit,
+                   static_argnames=("nprobe", "k", "mode", "metric", "impl",
+                                    "prefilter"))
+def _search_batch(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int,
+                  k: int, mode: str, metric: str, thres_scale: float,
+                  impl: str = "ref", side: SideBuffer | None = None,
+                  prefilter: str = "scan", rt_grid=None,
+                  rt_scale: float = 1.0, rt_offset=None):
+    """One jitted query batch. Returns (scores (Q,k), ids (Q,k)).
+
+    impl="ref"    — pure-jnp reference path (semantics of record)
+    impl="pallas" — fused Pallas kernels (TPU path; interpret=True on CPU)
+    side          — optional overflow buffer of online inserts, merged into
+                    the final top-k with in-cluster-identical scoring.
+    prefilter     — "scan" (dense, every probed cluster scanned) or "rt"
+                    (RT-core-style sphere-intersection pruning: probes
+                    whose cluster disc the query sphere misses are masked
+                    out of the scans; needs ``rt_grid``, see ``repro.rt``).
+    """
+    q = queries.astype(jnp.float32)
+
+    # --- stage A: filtering (MXU GEMM + top-k), paper Fig. 1 bottom-left ---
+    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe, metric=metric)
+    codes = index.cluster_codes[cids]                            # (Q, np, P, S)
+    valid = index.ivf.valid[cids]                                # (Q, np, P)
+    ids = index.ivf.point_ids[cids]                              # (Q, np, P)
+    return _score_probed(index, q, base, cids, codes, valid, ids, k=k,
+                         mode=mode, metric=metric, thres_scale=thres_scale,
+                         impl=impl, side=side, prefilter=prefilter,
+                         rt_grid=rt_grid, rt_scale=rt_scale,
+                         rt_offset=rt_offset)
+
+
+def _score_probed_two_stage(index: JunoIndexData, q: jnp.ndarray,
+                            base: jnp.ndarray, cids: jnp.ndarray,
+                            codes: jnp.ndarray, valid: jnp.ndarray,
+                            ids: jnp.ndarray, *, k: int, metric: str,
                             thres_scale: float, rerank: int = 0,
                             impl: str = "ref", fused: bool = False,
                             side: SideBuffer | None = None,
@@ -387,13 +414,17 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
     same top-C-by-count rule, so fused and composed return identical ids
     (tests/test_impl_parity.py). Orthogonal to ``impl``, which picks who
     builds the LUT/hit tables.
+
+    Like :func:`_score_probed`, this is the post-gather tail of
+    :func:`_search_batch_two_stage`: ``base``/``cids``/``codes``/``valid``/
+    ``ids`` arrive pre-gathered so the resident and paged
+    (``repro.serve.paged``) backends share the scoring math verbatim.
     """
-    q = queries.astype(jnp.float32)
     nq = q.shape[0]
+    nprobe = cids.shape[1]
     m = index.codebook.sub_dim
     c_budget = rerank or 4 * k
 
-    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe, metric=metric)
     if metric == "l2":
         res = q[:, None, :] - index.ivf.centroids[cids]
         qsub = res.reshape(nq, nprobe, -1, m)
@@ -404,9 +435,6 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
         probe_base = base
     tau = density_lib.predict_threshold(index.density, qsub, thres_scale)
 
-    codes = index.cluster_codes[cids]                            # (Q,np,P,S)
-    valid = index.ivf.valid[cids]
-    ids = index.ivf.point_ids[cids]
     if prefilter == "rt":
         probe_ok = _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset)
         valid = valid & probe_ok[..., None]
@@ -486,6 +514,32 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
         out_scores = -sel_s
     out_ids = jnp.take_along_axis(cand_ids, sel, axis=1)
     return out_scores, out_ids
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric", "impl",
+                                             "rerank", "fused", "prefilter"))
+def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
+                            nprobe: int, k: int, metric: str,
+                            thres_scale: float, rerank: int = 0,
+                            impl: str = "ref", fused: bool = False,
+                            side: SideBuffer | None = None,
+                            prefilter: str = "scan", rt_grid=None,
+                            rt_scale: float = 1.0, rt_offset=None):
+    """Mode "H2" entry point: stage-A filter + gathers, then the shared
+    two-stage scoring tail (:func:`_score_probed_two_stage`). Returns
+    (scores (Q, k), ids (Q, k)); see the tail's docstring for the fused
+    and composed candidate-selection semantics.
+    """
+    q = queries.astype(jnp.float32)
+    base, cids = filter_clusters(q, index.ivf, nprobe=nprobe, metric=metric)
+    codes = index.cluster_codes[cids]                            # (Q,np,P,S)
+    valid = index.ivf.valid[cids]
+    ids = index.ivf.point_ids[cids]
+    return _score_probed_two_stage(
+        index, q, base, cids, codes, valid, ids, k=k, metric=metric,
+        thres_scale=thres_scale, rerank=rerank, impl=impl, fused=fused,
+        side=side, prefilter=prefilter, rt_grid=rt_grid, rt_scale=rt_scale,
+        rt_offset=rt_offset)
 
 
 def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,

@@ -2,3 +2,5 @@ from .ann import AnnRequest, AnnServeEngine  # noqa: F401
 from .engine import Request, ServeEngine  # noqa: F401
 from .fleet import (AnnServeFleet, FleetRequest,  # noqa: F401
                     LatencyHistogram, Rejection)
+from .paged import (ClusterCache, PagedAnnServeEngine,  # noqa: F401
+                    PagedIndexData, PagedJunoIndex)

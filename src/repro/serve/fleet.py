@@ -93,8 +93,15 @@ class LatencyHistogram:
         self.max = max(self.max, s)
 
     def merge(self, other: "LatencyHistogram") -> None:
-        """Fold another histogram (same bucketing) into this one."""
-        if other._counts.shape != self._counts.shape:
+        """Fold another histogram (same bucketing) into this one.
+
+        The bucketings must be identical, which means the *edges* must
+        match — two histograms with different ``lo``/``bins_per_decade``
+        can land on the same bucket count (e.g. ``lo=1e-5, hi=5000`` vs
+        the defaults), and folding those counts together would corrupt
+        every percentile. Raises ValueError on any mismatch.
+        """
+        if not np.array_equal(other._edges, self._edges):
             raise ValueError("histogram bucketings differ")
         self._counts += other._counts
         self.n += other.n
@@ -270,9 +277,14 @@ class AnnServeFleet:
 
         Parameters
         ----------
-        index : JunoIndexData
+        index : JunoIndexData or repro.serve.paged.PagedIndexData
             The built index every replica serves (each replica wraps its
             own mutable copy; arrays are shared until first mutation).
+            A :class:`~repro.serve.paged.PagedIndexData` builds a fleet
+            of :class:`~repro.serve.paged.PagedAnnServeEngine` replicas
+            sharing ONE memory-mapped artifact and ONE hot-cluster
+            cache (requires ``shards_per_replica == 1``; paged shards
+            are a storage split, not a device split).
         n_replicas : int
             Replica-group count (reads route to one, writes to all).
         shards_per_replica : int
@@ -303,7 +315,19 @@ class AnnServeFleet:
         self.max_queue = max_queue
         self.default_deadline_s = default_deadline_s
         self.engines: list[AnnServeEngine] = []
-        if shards_per_replica > 1:
+        # imported lazily: the paged tier pulls in the artifact store and
+        # is only needed when the caller actually serves out-of-core
+        from repro.serve.paged import PagedAnnServeEngine, PagedIndexData
+        if isinstance(index, PagedIndexData):
+            if shards_per_replica > 1:
+                raise ValueError(
+                    "paged serving does not compose with device sharding "
+                    "(shards_per_replica > 1): the paged tier is a storage "
+                    "split; scale reads with n_replicas instead")
+            for _ in range(n_replicas):
+                self.engines.append(PagedAnnServeEngine(
+                    index, side_capacity=side_capacity, **engine_kw))
+        elif shards_per_replica > 1:
             import jax
             from jax.sharding import Mesh
             devs = jax.devices()

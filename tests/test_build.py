@@ -32,7 +32,7 @@ from repro.build import (ArtifactError, ArtifactStore, BuildProbe,
                          array_source, build_streaming,
                          build_streaming_sharded, config_hash, load_index,
                          merge_shards, rebuild_index, save_index,
-                         split_shards)
+                         split_shards, verify_artifact)
 from repro.core import (JunoConfig, MutableJunoIndex, build, exact_topk,
                         recall_n_at_k, search)
 from repro.data import DEEP_LIKE, TTI_LIKE, make_dataset
@@ -244,6 +244,168 @@ def test_artifact_store_versions_and_latest(base, tmp_path):
                                   np.asarray(idx.codes))
     old = store.get("main", version=1)
     assert old.manifest["config_hash"] == config_hash(cfg)
+
+
+def test_put_retries_past_concurrent_commit(base, tmp_path, monkeypatch):
+    """A racing writer grabbing the computed generation number must not
+    crash put or clobber either artifact: the rename's exclusive-create
+    failure retries onto the next number (regression — the old put
+    renamed once onto a precomputed path and leaked the OSError)."""
+    import errno as _errno  # noqa: F401 — documents the contended errnos
+    pts, _, cfg, idx = base
+    store = ArtifactStore(str(tmp_path / "store"))
+    assert store.put("main", idx, cfg) == 1
+
+    real_rename = os.rename
+    raced = {"n": 0}
+
+    def racing_rename(src, dst):
+        if os.path.basename(src).startswith(".tmp-") and raced["n"] == 0:
+            raced["n"] += 1
+            # a concurrent writer commits this generation just before us
+            os.makedirs(dst)
+            with open(os.path.join(dst, "manifest.json"), "w") as fh:
+                fh.write("{}")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(os, "rename", racing_rename)
+    v = store.put("main", idx, cfg)
+    monkeypatch.undo()
+    assert raced["n"] == 1
+    assert v == 3 and store.versions("main") == [1, 2, 3]
+    loaded = store.get("main", version=3, expect_config=cfg)
+    np.testing.assert_array_equal(np.asarray(loaded.data.codes),
+                                  np.asarray(idx.codes))
+
+
+def test_put_crash_at_rename_leaves_no_partial_generation(base, tmp_path,
+                                                          monkeypatch):
+    """Dying between the artifact write and the publishing rename leaves
+    the store exactly as it was: no new version, no temp debris visible
+    to versions()/latest(), and the surviving generation still verifies."""
+    import errno
+    pts, _, cfg, idx = base
+    store = ArtifactStore(str(tmp_path / "store"))
+    assert store.put("main", idx, cfg) == 1
+
+    def crash(src, dst):
+        raise OSError(errno.EIO, "simulated crash at rename")
+
+    monkeypatch.setattr(os, "rename", crash)
+    with pytest.raises(OSError):
+        store.put("main", idx, cfg)
+    monkeypatch.undo()
+    assert store.versions("main") == [1] and store.latest("main") == 1
+    assert os.listdir(os.path.join(store.root, "main")) == ["v0001"]
+    verify_artifact(store.path("main", 1))
+    assert store.put("main", idx, cfg) == 2          # store still writable
+
+
+def test_put_fsyncs_artifact_before_publishing(base, tmp_path, monkeypatch):
+    """Durability ordering: every artifact byte (files AND directory
+    entries) is fsynced before the rename makes the generation visible,
+    and the parent directory is fsynced after it."""
+    pts, _, cfg, idx = base
+    store = ArtifactStore(str(tmp_path / "store"))
+    events = []
+    real_fsync, real_rename = os.fsync, os.rename
+    monkeypatch.setattr(
+        os, "fsync", lambda fd: (events.append("fsync"), real_fsync(fd))[1])
+    monkeypatch.setattr(
+        os, "rename",
+        lambda s, d: (events.append("rename"), real_rename(s, d))[1])
+    store.put("main", idx, cfg)
+    monkeypatch.undo()
+    r = events.index("rename")
+    assert events[:r].count("fsync") >= 3    # arrays.npz, manifest.json, dir
+    assert "fsync" in events[r + 1:]         # parent dir after publish
+
+
+def test_load_verify_levels(base, tmp_path):
+    """The three-level fail-closed contract: a flipped array bit trips
+    only "full" (and bool True); shape/dtype/set stay checked at
+    "manifest" (and bool False); "never" still refuses a foreign schema
+    version; junk levels raise ValueError."""
+    import json
+    pts, _, cfg, idx = base
+    path = str(tmp_path / "art")
+    save_index(path, idx, cfg)
+    apath = os.path.join(path, "arrays.npz")
+    with np.load(apath) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    corrupt = {k: v.copy() for k, v in arrays.items()}
+    corrupt["codes"][0, 0] ^= 1
+    np.savez(apath, **corrupt)
+
+    for v in ("full", True):
+        with pytest.raises(ArtifactError, match="checksum"):
+            load_index(path, verify=v)
+    for v in ("manifest", "never", False):
+        loaded = load_index(path, verify=v)          # no data digests read
+        assert loaded.data.codes.shape == idx.codes.shape
+    with pytest.raises(ValueError, match="verify"):
+        load_index(path, verify="paranoid")
+
+    # a missing array is a set mismatch: caught at "manifest" level
+    np.savez(apath, **{k: v for k, v in corrupt.items() if k != "codes"})
+    with pytest.raises(ArtifactError, match="array set"):
+        load_index(path, verify="manifest")
+
+    # schema version gates every level, including "never"
+    np.savez(apath, **arrays)
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["schema_version"] = 999
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(ArtifactError, match="schema version"):
+        load_index(path, verify="never")
+
+
+def test_load_index_mmap_bit_parity(base, tmp_path):
+    """mmap_mode="r" returns read-only memmap views bit-identical to the
+    resident load, defaults to manifest-level verification (no data
+    read), and still honors verify="full" by paging everything through
+    the digest check."""
+    pts, _, cfg, idx = base
+    path = str(tmp_path / "art")
+    save_index(path, idx, cfg)
+    full = load_index(path)
+    mm = load_index(path, mmap_mode="r")
+    leaves = jax.tree_util.tree_leaves(mm.data)
+    assert all(isinstance(b, np.memmap) for b in leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(full.data), leaves):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="mmap_mode"):
+        load_index(path, mmap_mode="w")
+
+    apath = os.path.join(path, "arrays.npz")
+    with np.load(apath) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["cluster_codes"][0, 0, 0] ^= 1
+    np.savez(apath, **arrays)
+    load_index(path, mmap_mode="r")                  # manifest default
+    with pytest.raises(ArtifactError, match="checksum"):
+        load_index(path, mmap_mode="r", verify="full")
+
+
+def test_manifest_carries_per_cluster_digests(base, tmp_path):
+    """save_index records one sha256 per cluster_codes row — the paged
+    tier's first-touch verification source — and load-time checks reject
+    a digest table whose length disagrees with the row count."""
+    import json
+    pts, _, cfg, idx = base
+    path = str(tmp_path / "art")
+    manifest = save_index(path, idx, cfg)
+    rows = manifest["arrays"]["cluster_codes"]["sha256_rows"]
+    assert len(rows) == cfg.n_clusters
+    assert len(set(rows)) > 1                        # real per-row digests
+    mpath = os.path.join(path, "manifest.json")
+    on_disk = json.load(open(mpath))
+    on_disk["arrays"]["cluster_codes"]["sha256_rows"] = rows[:-1]
+    json.dump(on_disk, open(mpath, "w"))
+    with pytest.raises(ArtifactError, match="per-row digests"):
+        load_index(path, verify="manifest")
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,8 @@ from repro.kernels import ops
 from repro.serve.ann import AnnRequest, AnnServeEngine
 from repro.serve.fleet import (AnnServeFleet, FleetRequest, LatencyHistogram,
                                Rejection)
+from repro.serve.paged import (ClusterCache, PagedAnnServeEngine,
+                               PagedIndexData, PagedJunoIndex)
 
 PUBLIC = [
     # repro.core index lifecycle
@@ -71,6 +73,16 @@ PUBLIC = [
     FleetRequest, FleetRequest.trace, Rejection,
     LatencyHistogram, LatencyHistogram.add, LatencyHistogram.merge,
     LatencyHistogram.percentile, LatencyHistogram.summary,
+    # paged (out-of-core) serving tier
+    ClusterCache, ClusterCache.get, ClusterCache.put, ClusterCache.stats,
+    PagedIndexData, PagedIndexData.__init__, PagedIndexData.fetch_cluster,
+    PagedIndexData.gather, PagedIndexData.fetch_vectors,
+    PagedIndexData.adopt_cache, PagedIndexData.stats,
+    PagedJunoIndex, PagedJunoIndex.swap_data, PagedJunoIndex.search,
+    PagedJunoIndex.ensure_rt_grid,
+    PagedAnnServeEngine, PagedAnnServeEngine.__init__,
+    PagedAnnServeEngine.compact, PagedAnnServeEngine.swap_index,
+    PagedAnnServeEngine.cache_stats,
 ]
 
 
@@ -98,8 +110,10 @@ def test_public_modules_have_docstrings():
     import repro.rt.intersect
     import repro.serve.ann
     import repro.serve.fleet
+    import repro.serve.paged
     for mod in [core, rt, ops, build, repro.core.juno, repro.serve.ann,
-                repro.serve.fleet, repro.rt.grid, repro.rt.intersect,
+                repro.serve.fleet, repro.serve.paged, repro.rt.grid,
+                repro.rt.intersect,
                 repro.kernels.ref, repro.dist.distributed_index,
                 repro.build.pipeline, repro.build.store, repro.build.rebuild]:
         assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__

@@ -272,3 +272,47 @@ def test_sharded_fleet_rejects_unwired_paths(served):
     _, _, idx = served
     with pytest.raises(ValueError, match="scan path only"):
         AnnServeFleet(idx, n_replicas=1, shards_per_replica=2, fused=True)
+
+
+# ---------------------------------------------------------------------------
+# latency histogram: bucketing identity + percentile edge cases
+# ---------------------------------------------------------------------------
+
+def test_histogram_merge_rejects_different_bucketings():
+    """Same bucket COUNT is not same bucketing: lo=1e-5/hi=5000 spans the
+    same ratio as the defaults, so the count tables have equal shape but
+    shifted edges — merging must raise instead of silently corrupting
+    every percentile (regression: the old check compared shapes only)."""
+    a = LatencyHistogram()
+    b = LatencyHistogram(lo=1e-5, hi=5000.0)
+    assert a._counts.shape == b._counts.shape        # the trap the fix closes
+    b.add(0.01)
+    with pytest.raises(ValueError, match="bucketings differ"):
+        a.merge(b)
+    assert a.n == 0                                  # refused before mutating
+    c = LatencyHistogram()
+    c.add(0.02)
+    a.merge(c)                                       # identical edges: folds
+    assert a.n == 1 and a.summary()["max"] == pytest.approx(0.02)
+
+
+def test_histogram_percentile_edge_cases():
+    """Empty histogram reports 0.0 everywhere; a single observation comes
+    back exactly (clamped to the observed max, not a bucket edge) at
+    every quantile; out-of-range observations land in the overflow /
+    underflow buckets and stay clamped to the true extremes."""
+    h = LatencyHistogram()
+    assert h.percentile(0.5) == 0.0
+    assert h.summary() == {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
+                           "p99": 0.0, "max": 0.0}
+    h.add(0.0123)
+    for p in (0.01, 0.5, 0.99, 1.0):
+        assert h.percentile(p) == 0.0123             # exact, not an edge
+    assert h.summary()["n"] == 1
+
+    over = LatencyHistogram()
+    over.add(1e9)                                    # past hi: overflow bucket
+    assert over.percentile(0.99) == 1e9
+    under = LatencyHistogram()
+    under.add(0.0)                                   # below lo: bucket 0
+    assert under.percentile(0.5) == 0.0

@@ -1,0 +1,348 @@
+"""Paged (out-of-core) serving tier: `repro.serve.paged`.
+
+The contract under test: an index committed to the artifact store can be
+served memory-mapped — PQ code shards demand-paged through a bounded LRU
+hot-cluster cache, centroid/grid metadata resident — with results
+bit-identical to resident serving (the scoring tail is shared code, so
+ids AND scores are equality-gated, even under eviction pressure). On top
+of that sit the tier's own guarantees: per-cluster sha256 verification
+on first touch (fail-closed — a flipped bit raises before it can serve),
+an exact-rerank tier whose scores are true metric values from the raw
+vectors, side-buffer-only mutability over the read-only shards, and
+atomic generation swaps that retarget the cache without ever mixing
+rows across generations.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.build import ArtifactError, ArtifactStore, save_index
+from repro.core import (JunoConfig, build, exact_topk, recall_n_at_k,
+                        search)
+from repro.data import DEEP_LIKE, make_dataset
+from repro.serve.ann import AnnServeEngine
+from repro.serve.fleet import AnnServeFleet
+from repro.serve.paged import (ClusterCache, PagedAnnServeEngine,
+                               PagedIndexData, PagedJunoIndex)
+
+
+@pytest.fixture(scope="module")
+def paged_env(tmp_path_factory):
+    pts, q = make_dataset(DEEP_LIKE, 6000, 32, key=jax.random.PRNGKey(5))
+    pts, q = np.asarray(pts), np.asarray(q)
+    cfg = JunoConfig(n_clusters=16, n_entries=16, calib_queries=12,
+                     kmeans_iters=4, capacity_mult=1.2)
+    idx = build(pts, cfg)
+    root = tmp_path_factory.mktemp("paged")
+    store = ArtifactStore(str(root / "store"))
+    assert store.put("main", idx, cfg) == 1
+    vec_path = str(root / "vectors.npy")
+    np.save(vec_path, pts.astype(np.float32))
+    return pts, q, cfg, idx, store, vec_path
+
+
+def _quarter_cache(idx) -> int:
+    """Cache capacity of 1/4 the PQ shard bytes: real eviction pressure."""
+    return max(1, int(np.asarray(idx.cluster_codes).nbytes) // 4)
+
+
+# ---------------------------------------------------------------------------
+# cache unit behavior
+# ---------------------------------------------------------------------------
+
+def test_cluster_cache_lru_eviction_and_bypass():
+    """LRU order (get refreshes recency), byte-bounded eviction, oversize
+    bypass, and clear() keeping capacity + cumulative counters."""
+    rows = {i: np.full((4, 4), i, np.uint8) for i in range(6)}   # 16 B each
+    c = ClusterCache(capacity_bytes=48)                          # 3 rows
+    for i in range(4):
+        assert c.get(i) is None
+        c.put(i, rows[i])
+    assert len(c) == 3 and c.evictions == 1          # row 0 was LRU
+    assert c.get(0) is None and c.get(1) is not None  # 1 is now MRU
+    c.put(4, rows[4])
+    c.put(5, rows[5])                                 # evict 2 then 3, not 1
+    assert c.get(1) is not None
+    assert c.get(2) is None and c.get(3) is None
+    before = len(c)
+    c.put(9, np.zeros(64, np.uint8))                  # larger than the cache
+    assert len(c) == before and c.get(9) is None
+    st = c.stats()
+    c.clear()
+    assert len(c) == 0 and c.bytes == 0
+    assert c.stats()["hits"] == st["hits"]
+    assert c.stats()["evictions"] == st["evictions"]
+    assert c.stats()["capacity_bytes"] == 48
+
+
+# ---------------------------------------------------------------------------
+# paged == resident (the tentpole parity gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["H", "M", "L", "H2"])
+def test_paged_search_matches_resident_bit_exact(paged_env, mode):
+    """Every mode returns resident `search()`'s scores AND ids exactly,
+    with a quarter-sized cache so eviction pressure is part of the run."""
+    pts, q, cfg, idx, store, _ = paged_env
+    paged = PagedIndexData(store.path("main", 1),
+                           cache_bytes=_quarter_cache(idx))
+    pidx = PagedJunoIndex(paged)
+    s0, i0 = search(idx, q, nprobe=8, k=10, mode=mode, metric=cfg.metric)
+    s1, i1 = pidx.search(q, nprobe=8, k=10, mode=mode, metric=cfg.metric)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    assert paged.cache.stats()["evictions"] > 0
+
+
+def test_paged_engine_matches_resident_engine(paged_env):
+    """Full request plane over the paged tier: a PagedAnnServeEngine and
+    a resident AnnServeEngine serve identical ids/scores per request."""
+    pts, q, cfg, idx, store, _ = paged_env
+    paged = PagedIndexData(store.path("main", 1),
+                           cache_bytes=_quarter_cache(idx))
+    peng = PagedAnnServeEngine(paged, metric=cfg.metric)
+    reng = AnnServeEngine(idx, metric=cfg.metric)
+    waves = [(q[:5], dict(k=10, mode="H", nprobe=8)),
+             (q[5:9], dict(k=10, mode="M", nprobe=8)),
+             (q[9:10], dict(k=10, mode="H2", nprobe=16)),
+             (q[10:20], dict(k=10, mode="L", nprobe=4))]
+    rp = [peng.submit(qs, **kw) for qs, kw in waves]
+    rr = [reng.submit(qs, **kw) for qs, kw in waves]
+    assert peng.run() == reng.run() == 20
+    for a, b in zip(rp, rr):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_fleet_over_paged_generation(paged_env):
+    """AnnServeFleet over a PagedIndexData: replicas share the one mmap +
+    cache, results match a resident engine, inserts fan out; the
+    shard-split topology is rejected (the paged tier is a storage split,
+    not a device split)."""
+    pts, q, cfg, idx, store, _ = paged_env
+    paged = PagedIndexData(store.path("main", 1),
+                           cache_bytes=_quarter_cache(idx))
+    with pytest.raises(ValueError, match="n_replicas"):
+        AnnServeFleet(paged, n_replicas=2, shards_per_replica=2)
+    fleet = AnnServeFleet(paged, n_replicas=2, metric=cfg.metric)
+    assert all(e.index.paged.cache is paged.cache for e in fleet.engines)
+    reng = AnnServeEngine(idx, metric=cfg.metric)
+    waves = [(q[i * 4:(i + 1) * 4], dict(k=10, mode="H", nprobe=8))
+             for i in range(4)]
+    rf = [fleet.submit(qs, **kw) for qs, kw in waves]
+    rr = [reng.submit(qs, **kw) for qs, kw in waves]
+    fleet.run()
+    reng.run()
+    for a, b in zip(rf, rr):
+        assert a.done
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    newpts = (pts[:4] + 0.01).astype(np.float32)
+    ids = fleet.insert(newpts)
+    req = fleet.submit(newpts, k=10, mode="H", nprobe=16)
+    fleet.run()
+    assert all(ids[j] in req.ids[j] for j in range(len(ids)))
+
+
+# ---------------------------------------------------------------------------
+# fail-closed first-touch verification
+# ---------------------------------------------------------------------------
+
+def test_first_touch_corruption_fails_closed(paged_env, tmp_path):
+    """A flipped bit in one cluster row raises on that row's FIRST fetch;
+    clean rows keep serving; opting out takes an explicit flag — and an
+    old artifact without per-row digests demands the same explicit
+    opt-out instead of silently serving unverifiable bytes."""
+    pts, _, cfg, idx, store, _ = paged_env
+    path = str(tmp_path / "art")
+    save_index(path, idx, cfg)
+    apath = os.path.join(path, "arrays.npz")
+    with np.load(apath) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["cluster_codes"][3, 0, 0] ^= 1
+    np.savez(apath, **arrays)
+
+    paged = PagedIndexData(path, cache_bytes=1 << 20)
+    clean = paged.fetch_cluster(2)
+    assert clean.shape == arrays["cluster_codes"].shape[1:]
+    with pytest.raises(ArtifactError, match="first touch"):
+        paged.fetch_cluster(3)
+    assert paged.verified_rows == 1                  # only the clean row
+
+    loose = PagedIndexData(path, cache_bytes=1 << 20, verify_rows=False)
+    loose.fetch_cluster(3)                           # explicit opt-out
+
+    mpath = os.path.join(path, "manifest.json")
+    m = json.load(open(mpath))
+    del m["arrays"]["cluster_codes"]["sha256_rows"]
+    json.dump(m, open(mpath, "w"))
+    with pytest.raises(ArtifactError, match="per-row digests"):
+        PagedIndexData(path, cache_bytes=1 << 20)
+    PagedIndexData(path, cache_bytes=1 << 20, verify_rows=False)
+
+
+def test_paged_stats_verify_once_and_gather_dedup(paged_env):
+    """Each row is digest-verified exactly once; `gather` faults every
+    distinct cluster once per call; the raw-vector tier reads addressed
+    rows (negative sentinel ids clamp to row 0)."""
+    pts, q, cfg, idx, store, vec_path = paged_env
+    paged = PagedIndexData(store.path("main", 1), cache_bytes=1 << 22,
+                           vectors=vec_path)
+    a = paged.fetch_cluster(0)
+    b = paged.fetch_cluster(0)
+    np.testing.assert_array_equal(a, b)
+    st = paged.stats()
+    assert st["verified_rows"] == 1
+    assert st["hits"] == 1 and st["misses"] == 1
+    assert st["cluster_bytes"] == np.asarray(idx.cluster_codes).nbytes
+    assert st["generation"] == store.path("main", 1)
+
+    cids = np.array([[1, 2, 1], [2, 3, 3]])
+    g = paged.gather(cids)
+    assert g.shape == cids.shape + a.shape
+    assert paged.stats()["misses"] == 4              # 1, 2, 3 once each
+    np.testing.assert_array_equal(g[0, 0], g[0, 2])
+
+    vv = paged.fetch_vectors(np.array([[0, 5, -1]]))
+    assert vv.shape == (1, 3, pts.shape[1])
+    np.testing.assert_array_equal(vv[0, 0], pts[0].astype(np.float32))
+    np.testing.assert_array_equal(vv[0, 2], vv[0, 0])
+    with pytest.raises(RuntimeError, match="vector"):
+        PagedIndexData(store.path("main", 1),
+                       cache_bytes=1 << 20).fetch_vectors(np.array([0]))
+
+
+# ---------------------------------------------------------------------------
+# exact-rerank tier
+# ---------------------------------------------------------------------------
+
+def test_exact_rerank_scores_are_exact_and_lift_recall(paged_env):
+    """With exact_rerank=C the returned scores are true squared-l2
+    distances recomputed from the raw vectors, and recall@10 does not
+    drop (it rises well clear of the PQ-only engine on this set)."""
+    pts, q, cfg, idx, store, vec_path = paged_env
+    paged = PagedIndexData(store.path("main", 1), cache_bytes=1 << 22,
+                           vectors=vec_path)
+    with pytest.raises(ValueError, match="vector"):
+        PagedAnnServeEngine(
+            PagedIndexData(store.path("main", 1), cache_bytes=1 << 20),
+            metric=cfg.metric, exact_rerank=40)
+    plain = PagedAnnServeEngine(paged, metric=cfg.metric)
+    rerank = PagedAnnServeEngine(paged, metric=cfg.metric, exact_rerank=40)
+    _, gt = exact_topk(jnp.asarray(q), jnp.asarray(pts), k=10)
+    recalls = {}
+    for name, eng in [("plain", plain), ("rerank", rerank)]:
+        req = eng.submit(q, k=10, mode="H2", nprobe=16)
+        eng.run()
+        recalls[name] = float(recall_n_at_k(jnp.asarray(req.ids), gt))
+        if name == "rerank":
+            d = np.sum((pts[req.ids].astype(np.float32)
+                        - q[:, None, :]) ** 2, axis=-1)
+            np.testing.assert_allclose(req.scores, d, rtol=1e-4)
+            assert np.all(np.diff(req.scores, axis=1) >= 0)
+    assert recalls["rerank"] >= recalls["plain"], recalls
+
+
+# ---------------------------------------------------------------------------
+# mutability over read-only shards
+# ---------------------------------------------------------------------------
+
+def test_paged_insert_delete_side_buffer_only(paged_env):
+    """Inserts NEVER touch the mmap'd shards (all side-buffered),
+    tombstones hide committed points via the resident valid mask, and
+    in-process compaction/rebuild is structurally refused."""
+    pts, _, cfg, idx, store, _ = paged_env
+    paged = PagedIndexData(store.path("main", 1), cache_bytes=1 << 22)
+    eng = PagedAnnServeEngine(paged, metric=cfg.metric, side_capacity=64)
+    rng = np.random.default_rng(7)
+    newpts = (pts[:4].mean(0)[None]
+              + 0.01 * rng.standard_normal((4, pts.shape[1]))
+              ).astype(np.float32)
+    ids = eng.insert(newpts)
+    assert min(ids) >= paged.first_new_id
+    assert eng.index.side_fill == 4          # read-only shards: all spill
+    req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert all(ids[j] in req.ids[j] for j in range(4))
+
+    victim = int(np.asarray(idx.ivf.point_ids[0])[0])
+    qv = pts[victim][None]
+    r0 = eng.submit(qv, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert victim in r0.ids[0]
+    eng.delete([victim])
+    r1 = eng.submit(qv, k=10, mode="H", nprobe=16)
+    eng.run()
+    assert victim not in r1.ids[0]
+
+    assert eng.compact() == 0 and eng.index.side_fill == 4
+    with pytest.raises(RuntimeError, match="offline"):
+        eng.compact(rebuild=True)
+
+
+def test_swap_generation_retargets_cache(paged_env):
+    """swap_index requires an explicit next PagedIndexData generation;
+    the new generation adopts the live cache with every row dropped
+    (never mixing generations) while counters/capacity carry over, and
+    post-swap results reproduce pre-swap ones."""
+    pts, q, cfg, idx, store, _ = paged_env
+    v2 = store.put("main", idx, cfg)
+    paged1 = PagedIndexData(store.path("main", 1), cache_bytes=1 << 22)
+    eng = PagedAnnServeEngine(paged1, metric=cfg.metric)
+    r0 = eng.submit(q[:8], k=10, mode="H", nprobe=8)
+    eng.run()
+    cache = paged1.cache
+    assert len(cache) > 0
+    traffic0 = cache.hits + cache.misses
+
+    with pytest.raises(RuntimeError, match="offline|generation"):
+        eng.swap_index()                     # no in-process rebuild default
+    with pytest.raises(TypeError):
+        eng.swap_index(idx)                  # resident data isn't one
+
+    paged2 = PagedIndexData(store.path("main", v2), cache_bytes=1 << 22)
+    assert eng.swap_index(paged2) == 1
+    assert paged2.cache is cache             # retargeted, not replaced
+    assert len(cache) == 0                   # rows dropped at the swap
+    assert cache.hits + cache.misses == traffic0
+    r1 = eng.submit(q[:8], k=10, mode="H", nprobe=8)
+    eng.run()
+    np.testing.assert_array_equal(r0.ids, r1.ids)
+    np.testing.assert_array_equal(r0.scores, r1.scores)
+    ids = eng.insert((pts[:2] + 0.01).astype(np.float32))
+    assert min(ids) >= paged2.first_new_id   # id space survives the swap
+
+
+# ---------------------------------------------------------------------------
+# rt prefilter over the paged tier
+# ---------------------------------------------------------------------------
+
+def test_paged_rt_needs_artifact_grid(paged_env, tmp_path):
+    """The rt grid cannot be built lazily out-of-core (it needs every
+    code): ensure_rt_grid refuses without an artifact-stored grid, and
+    serves the folded grid when the artifact carries one."""
+    from repro import rt as rt_lib
+
+    pts, q, cfg, idx, store, _ = paged_env
+    bare = PagedJunoIndex(PagedIndexData(store.path("main", 1),
+                                         cache_bytes=1 << 22))
+    with pytest.raises(RuntimeError, match="grid"):
+        bare.ensure_rt_grid(metric=cfg.metric)
+
+    grid = rt_lib.build_grid(idx, metric=cfg.metric, calib_queries=8,
+                             points=pts)
+    path = str(tmp_path / "with_grid")
+    save_index(path, idx, cfg, rt_grid=grid)
+    paged = PagedIndexData(path, cache_bytes=1 << 22)
+    assert paged.rt_grid is not None
+    eng = PagedAnnServeEngine(paged, metric=cfg.metric, prefilter="rt",
+                              rt_scale=1e6)     # full coverage: parity
+    assert eng.index.ensure_rt_grid(metric=cfg.metric) is eng.index.rt_grid
+    req = eng.submit(q, k=10, mode="H", nprobe=16)
+    eng.run()
+    _, gt = exact_topk(jnp.asarray(q), jnp.asarray(pts), k=10)
+    assert float(recall_n_at_k(jnp.asarray(req.ids), gt)) > 0.3
