@@ -49,8 +49,23 @@ resident — paging trades throughput for footprint, bounded). ``--json-
 paged`` records the numbers (committed as BENCH_paged.json), including
 the exact-rerank tier's recall@10 uplift from the raw-vector file.
 
+A sixth section soaks the LSM FRESHNESS tiers: a tier-enabled engine
+(``max_minors > 0``) serves a fixed-signature query stream while insert
+batches aimed at a full cluster spill into the exact-scored L0 delta,
+promote into PQ-encoded minor generations, and fold incrementally back
+into the base — >= 8 full merge cycles driven entirely by the
+between-ticks ``MergeScheduler``, no stop-the-world rebuild. Gates,
+under ``--check``/``--smoke``: every cycle completes (the minor
+generation counter advances per cycle), per-cycle p99 stays <= 2x the
+steady-state p99 (merge work must amortize, not stall the serving
+path), and the end-state search matches a from-scratch
+``rebuild_index`` bit-identically (scores equal; ids equal up to
+exact-tie permutation). ``--json-freshness`` records the numbers
+(committed as BENCH_freshness.json).
+
     PYTHONPATH=src python benchmarks/serve_qps.py [--smoke] [--json PATH]
         [--json-rt PATH] [--json-fleet PATH] [--json-paged PATH]
+        [--json-freshness PATH]
 """
 from __future__ import annotations
 
@@ -74,6 +89,7 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 from benchmarks import common  # noqa: E402
+from repro.build.rebuild import rebuild_index  # noqa: E402
 from repro.build.store import ArtifactStore  # noqa: E402
 from repro.core import search  # noqa: E402
 from repro.serve.ann import AnnServeEngine  # noqa: E402
@@ -423,6 +439,167 @@ def run_paged(n_requests: int = 96, exact_rerank: int = 40) -> dict:
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+# freshness soak: request sizes of one query wave, all on ONE jit
+# signature (k=10, mode "M", nprobe 8) so per-cycle p99 measures merge
+# interference — not mode mix
+FRESH_WAVE = (1, 2, 4, 1)
+
+
+def run_freshness(n_cycles: int = 8, waves_per_cycle: int = 8) -> dict:
+    """Sustained mixed insert+query load across >= ``n_cycles`` merge cycles.
+
+    One cycle: fill the L0 delta with inserts aimed at a structurally
+    full cluster (every point spills), let the between-ticks scheduler
+    promote the full L0 into a PQ-encoded minor generation, retire an
+    equal batch of that cluster's base points, and let subsequent ticks
+    fold the minor back into the freed slots — the index returns to
+    quiescence with the same occupancy, ready for the next cycle. The
+    query stream never stops; per-cycle latency is measured over it.
+
+    Gates (all recorded in the returned dict): the minor-generation
+    counter advances at least once per cycle (merges really ran), each
+    cycle's p99 <= 2x the steady-state p99 (same jitted program, delta
+    tier warm but quiescent), and the end state searches bit-identically
+    to ``rebuild_index`` (scores equal; ids equal up to permutation
+    within exactly-tied scores).
+    """
+    pts, queries, index, gt, cfg = common.get_bench_index("deep")
+    queries = np.asarray(queries)
+    rng = np.random.default_rng(3)
+    d = queries.shape[1]
+
+    eng = AnnServeEngine(index, metric=cfg.metric, batch_buckets=(8,),
+                         side_capacity=16, max_minors=3,
+                         merge_clusters_per_step=8)
+    mid = eng.index
+    n_clusters = mid.data.ivf.point_ids.shape[0]
+    c = int(np.argmin([mid.free_slots(cc) for cc in range(n_clusters)]))
+    cent = np.asarray(mid.data.ivf.centroids[c])
+
+    def near_c(n: int) -> np.ndarray:
+        return (cent[None] + 0.01 * rng.standard_normal(
+            (n, d))).astype(np.float32)
+
+    def wave() -> None:
+        pos = rng.integers(0, queries.shape[0])
+        for nq in FRESH_WAVE:
+            rows = np.take(queries, range(pos, pos + nq), axis=0,
+                           mode="wrap")
+            eng.submit(rows, k=10, mode="M", nprobe=8)
+            pos += nq
+        eng.run()
+
+    # fill the target cluster so every cycle's inserts spill into L0
+    if mid.free_slots(c):
+        eng.insert(near_c(mid.free_slots(c)))
+    assert mid.free_slots(c) == 0, "freshness target cluster not full"
+    # retirement pool: base-resident ids of the target cluster; cycles
+    # retire from the head and append their own (folded) inserts
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    pool = [int(p) for p in row_ids[row_valid]]
+
+    def retire(n: int) -> list[int]:
+        victims, keep = [], []
+        while pool and len(victims) < n:
+            pid = pool.pop(0)
+            # delta-resident ids free no base slots yet; recycle them
+            (victims if mid._loc.get(pid, (-9, 0))[0] >= 0
+             else keep).append(pid)
+        pool.extend(keep)
+        assert len(victims) == n, "retirement pool exhausted"
+        return victims
+
+    # --- warm every program + merge path untimed: one full cycle ---------
+    wave()                                   # empty-delta program
+    warm_ids = eng.insert(near_c(mid.side.capacity))   # L0 fills
+    for _ in range(2):
+        wave()                               # ticks promote L0 -> minor
+    eng.delete(retire(len(warm_ids)))        # open fold targets
+    for _ in range(4):
+        wave()                               # ticks fold minor -> base
+    pool.extend(warm_ids)
+    assert mid._minor_gen >= 1, "warmup never promoted"
+
+    # --- steady state: quiescent delta (2 pinned L0 points keep the same
+    # combined-view program hot without crossing the promote threshold) --
+    pool.extend(eng.insert(near_c(2)))
+    eng.completed.clear()
+    for _ in range(2 * waves_per_cycle):
+        wave()
+    steady = eng.latency_stats()
+    steady_p99 = steady["p99"]
+
+    # --- the soak: n_cycles full spill -> promote -> fold cycles ---------
+    gen0, folded0 = mid._minor_gen, eng.scheduler.stats["folded"]
+    cycles = []
+    for _ in range(n_cycles):
+        eng.completed.clear()
+        need = mid.side.capacity - mid.side_fill
+        new_ids = eng.insert(near_c(need))
+        half = waves_per_cycle // 2
+        for _ in range(half):
+            wave()                           # promotion fires between ticks
+        # retire exactly one full L0 of base points: the promoted minor is
+        # always full, so every fold is the single jit-warmed full-capacity
+        # scatter shape and the cluster's occupancy is cycle-invariant
+        eng.delete(retire(int(mid.side.capacity)))
+        for _ in range(waves_per_cycle - half):
+            wave()                           # folds drain between ticks
+        lat = eng.latency_stats()
+        cycles.append({"p99": lat["p99"], "p50": lat["p50"],
+                       "minor_gen": mid._minor_gen,
+                       "delta_fill": mid.delta_fill})
+        pool.extend(new_ids)
+
+    cycles_promoted = mid._minor_gen - gen0
+    merges_ok = cycles_promoted >= n_cycles
+    tail_ratio = max(cy["p99"] for cy in cycles) / steady_p99
+    tail_ok = tail_ratio <= 2.0
+
+    # --- end-state parity vs a from-scratch stop-the-world rebuild -------
+    qq = np.concatenate([queries[:16], near_c(4)], axis=0)
+    s0, i0 = mid.search(qq, nprobe=min(16, n_clusters), k=10, mode="H")
+    rebuilt = rebuild_index(mid)
+    s1, i1 = search(rebuilt, qq, nprobe=min(16, n_clusters), k=10,
+                    mode="H", metric=cfg.metric, batch=qq.shape[0])
+    s0, i0, s1, i1 = (np.asarray(x) for x in (s0, i0, s1, i1))
+    scores_equal = np.array_equal(s0, s1)
+    ids_strict = np.array_equal(i0, i1)
+    ties_ok = scores_equal
+    if scores_equal and not ids_strict:
+        # lax.top_k may permute EXACTLY tied scores; ids must still agree
+        # as sets within every non-boundary score level
+        for r in range(s0.shape[0]):
+            boundary = s0[r, -1]
+            for v in np.unique(s0[r][s0[r] != boundary]):
+                if set(i0[r][s0[r] == v]) != set(i1[r][s1[r] == v]):
+                    ties_ok = False
+    parity_ok = scores_equal and ties_ok
+
+    gate_ok = merges_ok and tail_ok and parity_ok
+    common.emit("serve_qps.freshness_soak", 0.0,
+                f"cycles={cycles_promoted}/{n_cycles};"
+                f"steady_p99_ms={steady_p99 * 1e3:.1f};"
+                f"worst_cycle_p99_ms={max(cy['p99'] for cy in cycles) * 1e3:.1f};"
+                f"tail_ratio={tail_ratio:.2f};"
+                f"folded={eng.scheduler.stats['folded'] - folded0};"
+                f"parity={'bit' if ids_strict else 'tie' if parity_ok else 'FAIL'};"
+                f"gate={'OK' if gate_ok else 'FAIL'}")
+    return {"n_cycles": n_cycles, "cycles_promoted": cycles_promoted,
+            "waves_per_cycle": waves_per_cycle,
+            "side_capacity": int(mid.side.capacity),
+            "steady_p99_ms": steady_p99 * 1e3,
+            "tail_ratio": tail_ratio, "tail_bound": 2.0,
+            "cycles": [{"p99_ms": cy["p99"] * 1e3, "p50_ms": cy["p50"] * 1e3,
+                        "minor_gen": cy["minor_gen"],
+                        "delta_fill": cy["delta_fill"]} for cy in cycles],
+            "scheduler": dict(eng.scheduler.stats),
+            "scores_equal": scores_equal, "ids_strict": ids_strict,
+            "parity_ok": parity_ok, "merges_ok": merges_ok,
+            "tail_ok": tail_ok, "gate_ok": gate_ok}
+
+
 # fleet traffic: (n_queries,) request sizes cycled over, all on ONE jit
 # signature (k=10, mode "M", nprobe 8) so the tail measures queueing and
 # batching — not compile blips or mode mix — under overload
@@ -623,6 +800,8 @@ def main() -> int:
                     help="write fleet tail-latency numbers here")
     ap.add_argument("--json-paged", default=None, metavar="PATH",
                     help="write paged-vs-resident serving numbers here")
+    ap.add_argument("--json-freshness", default=None, metavar="PATH",
+                    help="write LSM-freshness merge-cycle soak numbers here")
     args = ap.parse_args()
     if args.smoke:
         common.set_smoke_sizes()
@@ -659,6 +838,19 @@ def main() -> int:
           f"{paged_res['ids_equal']}, evictions="
           f"{paged_res['cache']['evictions']}) -> "
           f"{'OK' if paged_ok else 'REGRESSION'}", file=sys.stderr)
+    fresh_res = run_freshness()
+    fresh_ok = fresh_res["gate_ok"]
+    print(f"# freshness soak: {fresh_res['cycles_promoted']}/"
+          f"{fresh_res['n_cycles']} merge cycles, tail ratio "
+          f"{fresh_res['tail_ratio']:.2f} (bound 2.0), rebuild parity "
+          f"{'bit' if fresh_res['ids_strict'] else 'tie'} -> "
+          f"{'OK' if fresh_ok else 'REGRESSION'}", file=sys.stderr)
+    if args.json_freshness:
+        with open(args.json_freshness, "w") as fh:
+            json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
+                       "dataset": "deep", **fresh_res},
+                      fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if args.json_paged:
         with open(args.json_paged, "w") as fh:
             json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
@@ -685,7 +877,8 @@ def main() -> int:
                        **res["fused"]}, fh, indent=2, sort_keys=True)
             fh.write("\n")
     if (args.check or args.smoke) and not (ok and fused_ok and rt_ok
-                                           and fleet_ok and paged_ok):
+                                           and fleet_ok and paged_ok
+                                           and fresh_ok):
         return 1
     return 0
 

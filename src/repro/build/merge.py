@@ -1,0 +1,246 @@
+"""Incremental fold of minor delta generations into the base index.
+
+This is the mechanics half of the LSM freshness engine
+(``repro.core.freshness`` holds the tiers and the policy driver).
+:func:`fold_step` moves live points of the oldest minor generations into
+already-free padded slots of their owning clusters — bounded,
+per-cluster work (one row scatter per generation touched), instead of
+``rebuild_index``'s stop-the-world escalation. On a sharded index a
+``lane`` restricts the fold to one shard's cluster range so each step's
+scatter lands on a single shard.
+
+The module also owns the on-disk format for artifact-backed minors:
+:func:`commit_minor` writes a generation through the same
+tmp-dir → fsync → atomic-rename discipline as
+:meth:`~repro.build.store.ArtifactStore.put`, with a per-row
+``sha256_rows`` manifest; :func:`minor_codes_loader` gives the matching
+verify-on-first-touch fault-in used by the paged tier.
+"""
+from __future__ import annotations
+
+import errno
+import json
+import os
+import shutil
+import uuid
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .store import ArtifactError, ArtifactStore, _array_digest, _fsync_dir
+
+MINOR_SCHEMA = 1
+_MINOR_ARRAYS = "minor.npz"
+_MINOR_MANIFEST = "manifest.json"
+
+
+def fold_step(mid, *, max_clusters: int = 32,
+              lane: Optional[tuple[int, int]] = None) -> int:
+    """Fold minor-generation points into free base slots of their clusters.
+
+    Walks generations oldest-first; for each, groups live positions by
+    owning cluster and moves up to ``len(_free[c])`` of them into that
+    cluster's freed padded slots, touching at most ``max_clusters``
+    clusters total. Commit ordering matches ``insert``/``compact``:
+    plan, validate the plan fail-closed (duplicate free slots raise
+    RuntimeError with nothing mutated), apply the device scatter, then
+    run the infallible host bookkeeping. Generations left with zero live
+    points are dropped. On a read-only base (the paged tier seals every
+    free list) this is a cheap no-op.
+
+    Parameters
+    ----------
+    mid : MutableIndexBase
+        Tier-enabled mutable index.
+    max_clusters : int
+        Budget: number of clusters folded in this call.
+    lane : (lo, hi) or None
+        Restrict the fold to clusters in ``[lo, hi)`` — one shard's
+        range when driven by a per-shard scheduler.
+
+    Returns
+    -------
+    int
+        Number of points moved into the base.
+    """
+    budget = int(max_clusters)
+    moved = 0
+    for m in list(getattr(mid, "_minors", [])):
+        if budget <= 0:
+            break
+        pos_all = np.where(m.valid)[0]
+        if lane is not None:
+            lo, hi = lane
+            keep = (m.cluster[pos_all] >= lo) & (m.cluster[pos_all] < hi)
+            pos_all = pos_all[keep]
+        if pos_all.size == 0:
+            continue
+        cl: list[int] = []
+        sl: list[int] = []
+        pos_l: list[int] = []
+        plan: list[tuple[int, int]] = []
+        for c in np.unique(m.cluster[pos_all]):
+            if budget <= 0:
+                break
+            c = int(c)
+            free = mid._free[c]
+            if not free:
+                continue
+            ppos = pos_all[m.cluster[pos_all] == c][:len(free)]
+            slots = free[-len(ppos):][::-1]
+            cl += [c] * len(ppos)
+            sl += [int(s) for s in slots]
+            pos_l += [int(p) for p in ppos]
+            plan.append((c, len(ppos)))
+            budget -= 1
+        if not pos_l:
+            continue
+        if len(set(zip(cl, sl))) != len(sl):
+            raise RuntimeError(
+                "fold plan references a base slot twice (corrupted free "
+                "list / double-free); refusing to fold")
+        codes = m.materialize()          # verified fault-in when disk-backed
+        pos_j = jnp.asarray(np.asarray(pos_l))
+        mid._apply_insert(cl, sl, m.ids[pos_l].astype(np.int32),
+                          jnp.asarray(codes)[pos_j])
+        # infallible host commit
+        for c, take in plan:
+            del mid._free[c][-take:]
+        for c, slot, pos in zip(cl, sl, pos_l):
+            mid._loc[int(m.ids[pos])] = (c, slot)
+        m.valid[np.asarray(pos_l)] = False
+        moved += len(pos_l)
+    if moved:
+        mid._minors = [m for m in mid._minors if m.live]
+        mid._delta_epoch += 1
+    return moved
+
+
+def save_minor(path: str, codes: np.ndarray, cluster: np.ndarray,
+               ids: np.ndarray, valid: np.ndarray, *, gen: int) -> dict:
+    """Write one minor generation (arrays + manifest) into ``path``.
+
+    The manifest carries whole-array sha256 digests plus per-row
+    ``sha256_rows`` over the PQ codes, mirroring ``save_index`` so the
+    demand-paged fault-in can verify rows the same way base shards are
+    verified.
+
+    Returns the manifest dict.
+    """
+    os.makedirs(path, exist_ok=True)
+    codes = np.ascontiguousarray(codes, np.uint8)
+    cluster = np.ascontiguousarray(cluster, np.int32)
+    ids = np.ascontiguousarray(ids, np.int32)
+    valid = np.ascontiguousarray(valid, bool)
+    arrays = {"codes": codes, "cluster": cluster, "ids": ids, "valid": valid}
+    manifest = {
+        "minor_schema": MINOR_SCHEMA,
+        "gen": int(gen),
+        "capacity": int(ids.shape[0]),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "sha256": _array_digest(v)}
+                   for k, v in arrays.items()},
+        "sha256_rows": [_array_digest(row) for row in codes],
+    }
+    np.savez(os.path.join(path, _MINOR_ARRAYS), **arrays)
+    with open(os.path.join(path, _MINOR_MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def commit_minor(store: ArtifactStore, name: str, codes: np.ndarray,
+                 cluster: np.ndarray, ids: np.ndarray, valid: np.ndarray,
+                 *, gen: int, max_attempts: int = 32) -> str:
+    """Atomically commit a minor generation under ``store.root/name``.
+
+    Same crash-safe discipline as :meth:`ArtifactStore.put`: write into a
+    unique temp dir, fsync every file and the directory, then rename
+    into the next free ``v%04d`` slot (retrying on collision with a
+    concurrent writer). A failure at any point leaves no committed
+    version behind.
+
+    Returns the committed version directory path.
+    """
+    base = os.path.join(store.root, name)
+    os.makedirs(base, exist_ok=True)
+    tmp = os.path.join(base, f".tmp-{os.getpid()}-{uuid.uuid4().hex[:8]}")
+    try:
+        save_minor(tmp, codes, cluster, ids, valid, gen=gen)
+        for fname in os.listdir(tmp):
+            with open(os.path.join(tmp, fname), "rb") as fh:
+                os.fsync(fh.fileno())
+        _fsync_dir(tmp)
+        for _ in range(max_attempts):
+            version = (store.latest(name) or 0) + 1
+            dst = store.path(name, version)
+            try:
+                os.rename(tmp, dst)
+            except OSError as e:
+                if e.errno not in (errno.EEXIST, errno.ENOTEMPTY,
+                                   errno.ENOTDIR, errno.EISDIR):
+                    raise
+                continue  # lost the race for this generation number
+            _fsync_dir(base)
+            return dst
+        raise ArtifactError(
+            f"could not commit minor generation under {base!r}: "
+            f"{max_attempts} version slots taken by concurrent writers")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def load_minor(path: str, *, verify_rows: bool = True):
+    """Load a minor generation from disk, verifying digests fail-closed.
+
+    Raises :class:`ArtifactError` on a missing/alien manifest, an array
+    set mismatch, or (with ``verify_rows``) any PQ code row whose sha256
+    does not match the manifest — corruption surfaces as an error, never
+    as garbage candidates.
+
+    Returns ``(codes, cluster, ids, valid, manifest)`` as host arrays.
+    """
+    mpath = os.path.join(path, _MINOR_MANIFEST)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ArtifactError(f"unreadable minor manifest {mpath!r}: {e}")
+    if manifest.get("minor_schema") != MINOR_SCHEMA:
+        raise ArtifactError(
+            f"{mpath!r} is not a minor generation "
+            f"(minor_schema={manifest.get('minor_schema')!r})")
+    with np.load(os.path.join(path, _MINOR_ARRAYS)) as z:
+        if set(z.files) != set(manifest["arrays"]):
+            raise ArtifactError(
+                f"minor array set mismatch in {path!r}: "
+                f"{sorted(z.files)} vs {sorted(manifest['arrays'])}")
+        codes = z["codes"]
+        cluster = z["cluster"]
+        ids = z["ids"]
+        valid = z["valid"]
+    if verify_rows:
+        rows = manifest.get("sha256_rows")
+        if rows is None or len(rows) != codes.shape[0]:
+            raise ArtifactError(
+                f"minor manifest {mpath!r} lacks per-row digests")
+        for i, row in enumerate(codes):
+            if _array_digest(np.ascontiguousarray(row)) != rows[i]:
+                raise ArtifactError(
+                    f"sha256 mismatch on minor code row {i} in {path!r}: "
+                    f"artifact corrupt")
+    return codes, cluster, ids, valid, manifest
+
+
+def minor_codes_loader(path: str) -> Callable[[], jnp.ndarray]:
+    """First-touch fault-in for an artifact-backed minor generation.
+
+    The returned thunk reads the generation's PQ codes from ``path``,
+    verifies every row's sha256 against the manifest (raising
+    :class:`ArtifactError` on corruption), and returns them as a device
+    array — the paged tier's fail-closed contract, applied to minors.
+    """
+    def load() -> jnp.ndarray:
+        codes, _, _, _, _ = load_minor(path, verify_rows=True)
+        return jnp.asarray(np.ascontiguousarray(codes))
+    return load

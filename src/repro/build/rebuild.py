@@ -43,14 +43,17 @@ def live_points(mid: MutableIndexBase, point_ids: np.ndarray,
                 ) -> list[list[tuple[int, np.ndarray]]]:
     """Per-cluster live (id, code) lists for a mutable index snapshot.
 
-    In-cluster points come first in slot order, then drained side-buffer
-    points in buffer-position order — the deterministic repack order both
-    the single-device and per-shard rebuilds share.
+    In-cluster points come first in slot order, then drained delta-tier
+    points — the L0 side buffer followed by each minor generation, in
+    position order (``delta_snapshot``) — the deterministic repack order
+    both the single-device and per-shard rebuilds share. A rebuild
+    therefore folds minor generations into the base exactly like side
+    spills: the escalation path can never lose tiered points.
 
     Parameters
     ----------
     mid : MutableIndexBase
-        The live index (supplies the side buffer).
+        The live index (supplies the delta tiers).
     point_ids, valid, cluster_codes : np.ndarray
         Host snapshots of the padded storage ((C, P), (C, P), (C, P, S)).
     clusters : range, optional
@@ -70,14 +73,11 @@ def live_points(mid: MutableIndexBase, point_ids: np.ndarray,
     for c in clusters:
         for slot in np.where(valid[c])[0]:
             out[c].append((int(point_ids[c, slot]), cluster_codes[c, slot]))
-    side_valid = np.asarray(mid.side.valid)
-    side_cluster = np.asarray(mid.side.cluster)
-    side_ids = np.asarray(mid.side.ids)
-    side_codes = np.asarray(mid.side.codes)
-    for pos in np.where(side_valid)[0]:
-        c = int(side_cluster[pos])
+    d_valid, d_cluster, d_ids, d_codes = mid.delta_snapshot()
+    for pos in np.where(d_valid)[0]:
+        c = int(d_cluster[pos])
         if clusters.start <= c < clusters.stop:
-            out[c].append((int(side_ids[pos]), side_codes[pos]))
+            out[c].append((int(d_ids[pos]), d_codes[pos]))
     return out
 
 

@@ -1,0 +1,322 @@
+"""LSM-style freshness tiers for the mutable index (`repro.core.freshness`).
+
+The PR 2 mutability story gave every mutable index exactly one delta
+structure: a fixed-capacity :class:`~repro.core.juno.SideBuffer` (L0)
+whose only escape hatch was ``compact()`` escalating to a stop-the-world
+``rebuild_index``. This module generalizes that into a small LSM tree
+("GPU-Accelerated ANNS: Quantized for Speed, Built for Change",
+PAPERS.md):
+
+* **L0** — the existing side buffer: inserts land here when their owning
+  cluster's padded slots are full, PQ-encoded with the existing
+  codebooks and scored exactly like in-cluster siblings.
+* **Minor generations** — sealed, immutable snapshots of a full L0
+  (:class:`MinorGeneration`), promoted by :func:`promote_l0`. Deletes
+  tombstone their host-side valid mask; their codes may live on disk
+  (artifact-backed, demand-paged — see ``repro.build.merge``).
+* **Base** — the padded per-cluster storage. Minor points drain into
+  freed base slots via the incremental per-cluster fold in
+  ``repro.build.merge.fold_step`` — bounded work per call, instead of
+  the full-rebuild escalation.
+
+:func:`combined_delta` presents L0 ⊕ minors to the jitted search as ONE
+:class:`~repro.core.juno.SideBuffer` of FIXED capacity
+``B · (1 + max_minors)`` — promotions and folds change its contents,
+never its shape, so every jitted search signature stays warm across
+merge cycles (the same kept-capacity discipline as
+``build/rebuild.py``). Delta points therefore inherit the probe-gated
+scoring — including the ``prefilter="rt"`` sphere-test verdict — of
+in-cluster points verbatim.
+
+:class:`MergeScheduler` is the policy driver: ``maybe_step()`` runs one
+bounded merge step between engine ticks (the same control-path hook
+pattern as ``AnnServeEngine.swap_index``), and ``drain()`` runs steps to
+quiescence for ``compact()``. On a sharded index it schedules per-shard
+lanes (``DistributedMutableIndex.merge_lanes``) round-robin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .juno import SideBuffer, empty_side_buffer
+
+
+@dataclasses.dataclass
+class MinorGeneration:
+    """One sealed, PQ-encoded delta generation (a promoted L0 tier).
+
+    ``cluster``/``ids``/``valid`` are host arrays — ``valid`` is the only
+    mutable field (deletes tombstone it, folds clear drained positions).
+    ``codes`` may be None for an artifact-backed generation; ``loader``
+    then faults them in on first search touch, verifying each row's
+    sha256 against the minor's manifest (``repro.build.merge``) — the
+    same fail-closed first-touch contract the paged base tier has.
+    """
+
+    gen: int                         #: monotone generation number
+    cluster: np.ndarray              #: (B,) int32 owning clusters
+    ids: np.ndarray                  #: (B,) int32 global point ids
+    valid: np.ndarray                #: (B,) bool host-mutable tombstones
+    codes: Optional[jnp.ndarray]     #: (B, S) uint8, or None until faulted
+    loader: Optional[Callable[[], jnp.ndarray]] = None
+    path: Optional[str] = None       #: artifact directory when disk-backed
+
+    @property
+    def capacity(self) -> int:
+        """Fixed slot count B of this generation."""
+        return int(self.ids.shape[0])
+
+    @property
+    def live(self) -> int:
+        """Number of non-tombstoned points still in this generation."""
+        return int(self.valid.sum())
+
+    def materialize(self) -> jnp.ndarray:
+        """Return the (B, S) code array, faulting it in when disk-backed.
+
+        The first touch of an artifact-backed generation reads the codes
+        from disk and verifies every row's sha256 digest — a corrupt
+        minor raises :class:`~repro.build.store.ArtifactError` instead
+        of serving garbage candidates.
+        """
+        if self.codes is None:
+            self.codes = self.loader()
+        return self.codes
+
+
+def combined_delta(side: SideBuffer, minors: list[MinorGeneration],
+                   max_minors: int) -> SideBuffer:
+    """Present L0 ⊕ minor generations as one fixed-capacity SideBuffer.
+
+    The result's capacity is ``side.capacity * (1 + max_minors)``
+    regardless of how many minors currently exist (empty tail slots are
+    padding), so the jitted search signature is a function of the
+    *configuration*, not the merge state — promotions and folds never
+    retrace.
+
+    Parameters
+    ----------
+    side : SideBuffer
+        The live L0 tier.
+    minors : list of MinorGeneration
+        Current sealed generations, oldest first.
+    max_minors : int
+        Configured generation cap (``enable_tiers``).
+
+    Returns
+    -------
+    SideBuffer
+        Concatenated view; invalid slots carry cluster/id −1.
+    """
+    total = side.capacity * (1 + len(minors))
+    cap = side.capacity * (1 + max_minors)
+    if total > cap:
+        raise RuntimeError(
+            f"{len(minors)} minor generations exceed max_minors="
+            f"{max_minors} (bookkeeping bug)")
+    codes = [side.codes]
+    cluster = [side.cluster]
+    ids = [side.ids]
+    valid = [side.valid]
+    for m in minors:
+        codes.append(jnp.asarray(m.materialize()))
+        cluster.append(jnp.asarray(np.where(m.valid, m.cluster, -1)))
+        ids.append(jnp.asarray(m.ids))
+        valid.append(jnp.asarray(m.valid))
+    if cap > total:
+        pad = empty_side_buffer(cap - total, int(side.codes.shape[1]))
+        codes.append(pad.codes)
+        cluster.append(pad.cluster)
+        ids.append(pad.ids)
+        valid.append(pad.valid)
+    return SideBuffer(codes=jnp.concatenate(codes),
+                      cluster=jnp.concatenate(cluster),
+                      ids=jnp.concatenate(ids),
+                      valid=jnp.concatenate(valid))
+
+
+def promote_l0(mid) -> MinorGeneration:
+    """Seal the current L0 side buffer into a new minor generation.
+
+    The buffer's contents become an immutable :class:`MinorGeneration`
+    (codes stay PQ-encoded — they were encoded with the existing
+    codebooks at insert time), every promoted id's location is re-pointed
+    at the generation, and L0 resets to empty so inserts keep landing in
+    a small exact-scored tier. When the index has a minor sink attached
+    (``enable_tiers(minor_store=...)``, the paged tier), the generation
+    is committed through the :class:`~repro.build.store.ArtifactStore`
+    FIRST — a failing commit mutates nothing — and its codes are dropped
+    from memory, to be demand-paged back (sha256-row-verified) on first
+    search touch.
+
+    Parameters
+    ----------
+    mid : MutableIndexBase
+        The index whose L0 to promote (``enable_tiers`` must have been
+        called with ``max_minors > 0``).
+
+    Returns
+    -------
+    MinorGeneration
+        The sealed generation (also appended to the index's tier list).
+    """
+    if getattr(mid, "_max_minors", 0) <= 0:
+        raise RuntimeError("delta tiers are disabled; call "
+                           "enable_tiers(max_minors=...) first")
+    if len(mid._minors) >= mid._max_minors:
+        raise RuntimeError(
+            f"minor tier full ({mid._max_minors} generations); fold "
+            f"them into the base (build.merge.fold_step) or rebuild")
+    if mid.side_fill == 0:
+        raise RuntimeError("L0 is empty; nothing to promote")
+    side = mid.side
+    cluster = np.asarray(side.cluster).copy()
+    ids = np.asarray(side.ids).copy()
+    valid = np.asarray(side.valid).copy()
+    gen = mid._minor_gen
+    codes: Optional[jnp.ndarray] = side.codes
+    loader = path = None
+    sink = getattr(mid, "_minor_sink", None)
+    if sink is not None:
+        # fallible artifact commit FIRST: a failed write leaves the index
+        # untouched (all-or-nothing, like every other mutation here)
+        from repro.build import merge as merge_lib
+        store, name = sink
+        path = merge_lib.commit_minor(store, name, np.asarray(side.codes),
+                                      cluster, ids, valid, gen=gen)
+        loader = merge_lib.minor_codes_loader(path)
+        codes = None                 # demand-paged + verified on first touch
+    minor = MinorGeneration(gen=gen, cluster=cluster, ids=ids, valid=valid,
+                            codes=codes, loader=loader, path=path)
+    # infallible host commit
+    for pos in np.where(valid)[0]:
+        mid._loc[int(ids[pos])] = (-2 - gen, int(pos))
+    mid._minors.append(minor)
+    mid._minor_gen = gen + 1
+    mid.side = empty_side_buffer(side.capacity, int(side.codes.shape[1]))
+    mid._side_free = list(range(side.capacity))[::-1]
+    mid._delta_epoch += 1
+    return minor
+
+
+class MergeScheduler:
+    """Incremental background-merge policy over a tiered mutable index.
+
+    One ``step()`` does bounded work: fold L0 points into already-free
+    base slots (the vectorized ``compact()``), promote a full L0 into a
+    minor generation when one is open, and fold up to
+    ``clusters_per_step`` clusters of the oldest minor generations into
+    the base (``repro.build.merge.fold_step``). ``AnnServeEngine`` calls
+    :meth:`maybe_step` between ticks — the same control-path hook
+    ``swap_index`` uses — so merges amortize across serving instead of
+    stopping the world; ``compact()`` calls :meth:`drain`.
+
+    On a sharded index (anything exposing ``merge_lanes()``, i.e.
+    ``DistributedMutableIndex``) fold work is scheduled per shard: each
+    step folds clusters of ONE shard's lane, round-robin, so a step's
+    row scatter lands on a single shard.
+    """
+
+    def __init__(self, index, *, clusters_per_step: int = 32,
+                 promote_fill: float = 1.0):
+        """Attach a scheduler to a tier-enabled mutable index.
+
+        Parameters
+        ----------
+        index : MutableIndexBase
+            The index to merge (``enable_tiers`` already called).
+        clusters_per_step : int
+            Fold budget: clusters merged per ``step()`` call.
+        promote_fill : float
+            L0 fill fraction that triggers promotion (1.0 = only when
+            completely full; ``drain()`` also promotes partial L0s when
+            nothing else makes progress).
+        """
+        self.index = index
+        self.clusters_per_step = int(clusters_per_step)
+        self.promote_fill = float(promote_fill)
+        lanes = getattr(index, "merge_lanes", None)
+        self._lanes: list = list(lanes()) if callable(lanes) else [None]
+        self._lane_i = 0
+        self.stats = {"steps": 0, "promotions": 0, "folded": 0,
+                      "compacted": 0, "drains": 0}
+
+    @property
+    def pending(self) -> int:
+        """Delta points not yet folded into the base (L0 + minors)."""
+        return self.index.delta_fill
+
+    def _can_promote(self) -> bool:
+        idx = self.index
+        return (idx._max_minors > 0 and idx.side_fill > 0
+                and len(idx._minors) < idx._max_minors)
+
+    def maybe_step(self) -> int:
+        """Between-ticks hook: one bounded step, only when work pends.
+
+        Returns the number of points moved (0 when the delta tiers are
+        disabled, empty, or below the promotion threshold with no minor
+        generations to fold).
+        """
+        idx = self.index
+        if getattr(idx, "_max_minors", 0) <= 0:
+            return 0
+        if (not idx._minors
+                and idx.side_fill < self.promote_fill * idx.side.capacity):
+            return 0
+        return self.step()
+
+    def step(self) -> int:
+        """One bounded merge step; returns points moved between tiers."""
+        from repro.build.merge import fold_step
+        idx = self.index
+        moved = idx.compact()            # L0 → free base slots (vectorized)
+        self.stats["compacted"] += moved
+        if (idx.side_fill >= self.promote_fill * idx.side.capacity
+                and self._can_promote()):
+            moved += idx.side_fill
+            promote_l0(idx)
+            self.stats["promotions"] += 1
+        lane = self._lanes[self._lane_i]
+        self._lane_i = (self._lane_i + 1) % len(self._lanes)
+        folded = fold_step(idx, max_clusters=self.clusters_per_step,
+                           lane=lane)
+        self.stats["folded"] += folded
+        self.stats["steps"] += 1
+        return moved + folded
+
+    def drain(self, max_rounds: int = 10_000) -> int:
+        """Run merge steps to quiescence (the ``compact()`` entry point).
+
+        Rounds of one step per lane run until a full round moves
+        nothing; a stuck non-empty L0 is then promoted even below the
+        fill threshold when a minor slot is open (so ``compact()`` keeps
+        its side-always-drains guarantee whenever the tier has room).
+
+        Parameters
+        ----------
+        max_rounds : int
+            Safety bound on merge rounds.
+
+        Returns
+        -------
+        int
+            Total points moved between tiers.
+        """
+        total = 0
+        for _ in range(max_rounds):
+            progress = sum(self.step() for _ in range(len(self._lanes)))
+            if progress == 0:
+                if self.index.side_fill and self._can_promote():
+                    total += self.index.side_fill
+                    promote_l0(self.index)
+                    self.stats["promotions"] += 1
+                    continue
+                break
+            total += progress
+        self.stats["drains"] += 1
+        return total

@@ -685,6 +685,18 @@ class MutableIndexBase:
                 self._loc[int(pids[c, slot])] = (c, int(slot))
         self._side_free = list(range(side_capacity))[::-1]
         self._next_id = first_new_id
+        # LSM delta tiers (repro.core.freshness). A swap_data rederives the
+        # base bookkeeping but keeps the tier CONFIGURATION (a rebuild
+        # already folded the old tiers' points into the new base); the
+        # generation counter and rt mutation counter are monotone across
+        # swaps so stale cached views/budgets can never alias a new
+        # generation's state.
+        self._minors: list = []
+        self._max_minors: int = getattr(self, "_max_minors", 0)
+        self._minor_gen: int = getattr(self, "_minor_gen", 0)
+        self._delta_epoch: int = getattr(self, "_delta_epoch", 0) + 1
+        self._delta_cache: tuple[int, SideBuffer] | None = None
+        self._rt_muts: int = getattr(self, "_rt_muts", -1) + 1
 
     # ---- data-plane hooks (subclass responsibility) ----------------------
     def _labels_codes(self, pts: jnp.ndarray):
@@ -701,8 +713,11 @@ class MutableIndexBase:
         their owning clusters; when an ``repro.rt`` grid is attached
         (``self.rt_grid``), grows the touched clusters' projected reaches
         so the sphere filter never drops a cluster holding a fresh point.
-        No-op without a grid.
+        Always bumps :attr:`rt_mutations` (even gridless) so engine-side
+        routing caches keyed on it can never serve a pre-insert probe
+        budget to a post-insert index state.
         """
+        self._rt_muts += 1
         if getattr(self, "rt_grid", None) is None:
             return
         from repro import rt as rt_lib
@@ -734,18 +749,145 @@ class MutableIndexBase:
         """Free padded slots remaining in ``cluster``."""
         return len(self._free[cluster])
 
+    @property
+    def rt_mutations(self) -> int:
+        """Monotone counter of rt-relevant mutations (insert batches and
+        generation swaps); engine routing caches key on it to invalidate
+        stale probe budgets."""
+        return self._rt_muts
+
+    # ---- LSM delta tiers (repro.core.freshness) --------------------------
+    def enable_tiers(self, max_minors: int, *, minor_store=None,
+                     minor_name: str = "minors") -> None:
+        """Turn on the LSM freshness tiers (see ``repro.core.freshness``).
+
+        With ``max_minors > 0`` a full L0 side buffer no longer makes
+        ``insert`` raise: it is promoted into a sealed, PQ-encoded minor
+        generation (up to ``max_minors`` of them) that a
+        ``MergeScheduler`` folds back into the base incrementally.
+
+        Parameters
+        ----------
+        max_minors : int
+            Maximum concurrent minor generations (0 disables tiering —
+            the legacy single-SideBuffer behavior).
+        minor_store : repro.build.store.ArtifactStore, optional
+            When given, promoted generations are committed through the
+            store and demand-paged back on first search touch with
+            per-row sha256 verification (the paged tier's contract).
+        minor_name : str
+            Artifact name minors are committed under.
+        """
+        self._max_minors = int(max_minors)
+        if minor_store is not None:
+            self._minor_sink = (minor_store, minor_name)
+        self._delta_cache = None
+        self._delta_epoch += 1
+
+    @property
+    def delta_fill(self) -> int:
+        """Live points across all delta tiers (L0 + minor generations)."""
+        return self.side_fill + sum(m.live for m in self._minors)
+
+    def delta_view(self, *, elide_empty: bool = True):
+        """The delta tiers as ONE fixed-capacity :class:`SideBuffer`.
+
+        With tiering disabled this is exactly the legacy side buffer
+        (None when empty, so the no-spill hot path keeps its
+        side-elided jit signature). With tiering enabled, L0 and every
+        minor generation are concatenated — padded to the constant
+        capacity ``B * (1 + max_minors)`` so merge cycles never change
+        the jitted search signature — and cached until the next tier
+        mutation.
+
+        Parameters
+        ----------
+        elide_empty : bool
+            Return None when every tier is empty (default). The sharded
+            serve path passes False: its compiled dispatch always takes
+            a side argument.
+
+        Returns
+        -------
+        SideBuffer or None
+            The combined delta view.
+        """
+        if self._max_minors <= 0:
+            if elide_empty and self.side_fill == 0:
+                return None
+            return self.side
+        if elide_empty and self.side_fill == 0 and not self._minors:
+            return None
+        if (self._delta_cache is None
+                or self._delta_cache[0] != self._delta_epoch):
+            from .freshness import combined_delta
+            self._delta_cache = (
+                self._delta_epoch,
+                combined_delta(self.side, self._minors, self._max_minors))
+        return self._delta_cache[1]
+
+    def delta_snapshot(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                      np.ndarray]:
+        """Host-side ``(valid, cluster, ids, codes)`` over L0 + minors.
+
+        The unpadded concatenation of every delta tier's slots, used by
+        ``build.rebuild.live_points`` so an offline rebuild folds minor
+        generations in exactly like side-buffer points.
+        """
+        valid = [np.asarray(self.side.valid)]
+        cluster = [np.asarray(self.side.cluster)]
+        ids = [np.asarray(self.side.ids)]
+        codes = [np.asarray(self.side.codes)]
+        for m in self._minors:
+            valid.append(m.valid)
+            cluster.append(m.cluster)
+            ids.append(m.ids)
+            codes.append(np.asarray(m.materialize()))
+        return (np.concatenate(valid), np.concatenate(cluster),
+                np.concatenate(ids), np.concatenate(codes))
+
     # ---- mutation --------------------------------------------------------
+    def _placement_fits(self, labels: np.ndarray, side_slots: int) -> bool:
+        """Whether a batch with these owning clusters is placeable, given
+        ``side_slots`` free L0 positions. Pure feasibility check — reads
+        the free lists, mutates nothing."""
+        cs, counts = np.unique(labels, return_counts=True)
+        spill = sum(max(0, int(n) - len(self._free[int(c)]))
+                    for c, n in zip(cs, counts))
+        return spill <= side_slots
+
     def insert(self, points) -> list[int]:
         """Insert a (B, D) batch; returns the assigned global ids.
 
         Raises RuntimeError (before mutating anything) if the batch cannot
-        be placed — i.e. some owning cluster is full AND the side buffer
+        be placed — i.e. some owning cluster is full AND the delta tier
         cannot absorb the remainder; call ``compact()`` or build with a
-        larger ``side_capacity``.
+        larger ``side_capacity``. With the LSM tiers enabled
+        (:meth:`enable_tiers`) a full L0 is first promoted into a minor
+        generation — but only when the batch provably fits afterwards, so
+        a failing insert still mutates nothing. The commit itself is
+        device-plane-first: every device update is a functional replace,
+        so a failing subclass scatter (device OOM, a sealed paged shard)
+        also leaves ALL state untouched; the infallible host bookkeeping
+        runs last.
         """
         pts = jnp.atleast_2d(jnp.asarray(points, jnp.float32))
         labels, codes = self._labels_codes(pts)                  # (B,), (B, S)
         labels = np.asarray(labels)
+
+        # feasibility first (no mutation). When the batch overflows, an
+        # L0→minor promotion may free the whole side buffer — taken only
+        # when the retry provably fits, keeping insert all-or-nothing.
+        if not self._placement_fits(labels, len(self._side_free)):
+            if (self._max_minors > 0 and self.side_fill > 0
+                    and len(self._minors) < self._max_minors
+                    and self._placement_fits(labels, self.side.capacity)):
+                from .freshness import promote_l0
+                promote_l0(self)
+            else:
+                raise RuntimeError(
+                    "insert batch does not fit: cluster padding and side "
+                    "buffer exhausted — call compact() or raise side_capacity")
 
         # plan (no mutation yet) — per-cluster free slots, then side buffer
         taken: dict[int, int] = {}
@@ -755,101 +897,163 @@ class MutableIndexBase:
             c = int(c)
             used = taken.get(c, 0)
             if used < len(self._free[c]):
+                # plan reads slots from the free lists' tails in order, so
+                # the commit below can drop the tails in O(1)
                 placements.append((c, self._free[c][-1 - used]))
                 taken[c] = used + 1
             elif side_need < len(self._side_free):
                 placements.append((-1, self._side_free[-1 - side_need]))
                 side_need += 1
-            else:
+            else:                                # unreachable after _fits
                 raise RuntimeError(
                     "insert batch does not fit: cluster padding and side "
                     "buffer exhausted — call compact() or raise side_capacity")
 
-        # commit
         new_ids = list(range(self._next_id, self._next_id + pts.shape[0]))
-        self._next_id += pts.shape[0]
+        ids_np = np.asarray(new_ids, np.int32)
         cl, sl, sel, s_pos, s_sel = [], [], [], [], []
         for i, (c, slot) in enumerate(placements):
-            # plan took slots from the free lists' tails in order, so pop()
-            # yields exactly the planned slot in O(1) (never inside an
-            # assert — those vanish under python -O)
             if c >= 0:
-                popped = self._free[c].pop()
                 cl.append(c)
                 sl.append(slot)
                 sel.append(i)
-                self._loc[new_ids[i]] = (c, slot)
             else:
-                popped = self._side_free.pop()
                 s_pos.append(slot)
                 s_sel.append(i)
-                self._loc[new_ids[i]] = (-1, slot)
-            if popped != slot:
-                raise AssertionError(
-                    f"slot plan/commit desync: planned {slot}, got {popped}")
-        ids_np = np.asarray(new_ids, np.int32)
-        if cl:
-            self._apply_insert(cl, sl, ids_np[sel], codes[jnp.asarray(sel)])
+
+        # commit: fallible device planes first, as functional replaces …
+        new_side = None
         if s_pos:
             pos_j, sel_j = jnp.asarray(s_pos), jnp.asarray(s_sel)
-            self.side = self.side._replace(
+            new_side = self.side._replace(
                 codes=self.side.codes.at[pos_j].set(codes[sel_j]),
                 cluster=self.side.cluster.at[pos_j].set(
                     jnp.asarray(labels[s_sel], jnp.int32)),
                 ids=self.side.ids.at[pos_j].set(jnp.asarray(ids_np[s_sel])),
                 valid=self.side.valid.at[pos_j].set(True))
+        if cl:
+            self._apply_insert(cl, sl, ids_np[sel], codes[jnp.asarray(sel)])
+        # … then the infallible host bookkeeping
+        if new_side is not None:
+            self.side = new_side
+        for c, cnt in taken.items():
+            del self._free[c][-cnt:]
+        if side_need:
+            del self._side_free[-side_need:]
+        for i, (c, slot) in enumerate(placements):
+            self._loc[new_ids[i]] = (c, slot) if c >= 0 else (-1, slot)
+        self._next_id += pts.shape[0]
+        if s_pos:
+            self._delta_epoch += 1
         self._rt_on_insert(pts, labels)
         return new_ids
 
     def delete(self, ids) -> int:
         """Tombstone points by global id. Freed cluster slots become insert
         targets; no data movement. An unknown/already-deleted/duplicated id
-        raises KeyError BEFORE any state is touched (all-or-nothing)."""
+        raises KeyError BEFORE any state is touched (all-or-nothing).
+        Points living in a minor generation (cluster code ≤ −2 in the
+        location map) are tombstoned in that generation's host valid mask;
+        a generation emptied this way is dropped."""
         pids = [int(p) for p in np.atleast_1d(np.asarray(ids, np.int64))]
         if len(set(pids)) != len(pids):
             raise KeyError(f"duplicate ids in delete batch: {pids}")
         locs = [self._loc[p] for p in pids]      # KeyError = unknown id
         cl, sl, s_pos = [], [], []
-        for pid, (c, slot) in zip(pids, locs):
-            del self._loc[pid]
-            if c < 0:
-                s_pos.append(slot)
-                self._side_free.append(slot)
-            else:
+        m_pos: dict[int, list[int]] = {}         # minor gen -> positions
+        for c, slot in locs:
+            if c >= 0:
                 cl.append(c)
                 sl.append(slot)
-                self._free[c].append(slot)
+            elif c == -1:
+                s_pos.append(slot)
+            else:
+                m_pos.setdefault(-2 - c, []).append(slot)
+        # fallible device planes first (functional replaces) …
         if cl:
             self._apply_delete(cl, sl)
         if s_pos:
             self.side = self.side._replace(
                 valid=self.side.valid.at[jnp.asarray(s_pos)].set(False))
+        # … then the infallible host bookkeeping
+        if m_pos:
+            by_gen = {m.gen: m for m in self._minors}
+            for g, poss in m_pos.items():
+                by_gen[g].valid[np.asarray(poss)] = False
+            self._minors = [m for m in self._minors if m.live]
+        for pid in pids:
+            del self._loc[pid]
+        for c, slot in locs:
+            if c >= 0:
+                self._free[c].append(slot)
+            elif c == -1:
+                self._side_free.append(slot)
+        if s_pos or m_pos:
+            self._delta_epoch += 1
         return len(pids)
 
     def compact(self) -> int:
         """Fold side-buffer points into freed slots of their owning cluster.
         Returns how many points moved; points whose cluster is still full
-        stay in the buffer. Search results are unchanged (same scoring)."""
+        stay in the buffer. Search results are unchanged (same scoring).
+
+        The plan is built vectorized (one stable argsort groups side
+        positions by owning cluster; each cluster donates its free-list
+        tail) and validated BEFORE anything mutates: a duplicated free
+        slot (double-free corruption) or a fold targeting a position
+        already back on ``_side_free`` (reused-slot aliasing) raises
+        RuntimeError with all state — host and device — untouched,
+        instead of silently overwriting a live slot. Commit ordering is
+        device-first / host-last, like ``insert``.
+        """
         side_valid = np.asarray(self.side.valid)
         side_cluster = np.asarray(self.side.cluster)
         side_ids = np.asarray(self.side.ids)
-        cl, sl, pos_l = [], [], []
-        for pos in np.where(side_valid)[0]:
-            c = int(side_cluster[pos])
-            if self._free[c]:
-                slot = self._free[c].pop()
-                cl.append(c)
-                sl.append(slot)
-                pos_l.append(int(pos))
-                self._loc[int(side_ids[pos])] = (c, slot)
-                self._side_free.append(int(pos))
+        pos_all = np.where(side_valid)[0]
+        if pos_all.size == 0:
+            return 0
+        order = np.argsort(side_cluster[pos_all], kind="stable")
+        pos_sorted = pos_all[order]
+        cs, starts, counts = np.unique(side_cluster[pos_sorted],
+                                       return_index=True, return_counts=True)
+        cl: list[int] = []
+        sl: list[int] = []
+        pos_l: list[int] = []
+        plan: list[tuple[int, int]] = []         # (cluster, take)
+        for c, st, n in zip(cs, starts, counts):
+            c = int(c)
+            take = min(int(n), len(self._free[c]))
+            if not take:
+                continue
+            slots = self._free[c][-take:][::-1]
+            cl += [c] * take
+            sl += [int(s) for s in slots]
+            pos_l += [int(p) for p in pos_sorted[st:st + take]]
+            plan.append((c, take))
         if not pos_l:
             return 0
+        # fail-closed plan validation (before ANY mutation)
+        if len(set(zip(cl, sl))) != len(sl):
+            raise RuntimeError(
+                "compact plan references a cluster slot twice (corrupted "
+                "free list / double-free); refusing to fold")
+        if set(pos_l) & set(self._side_free):
+            raise RuntimeError(
+                "compact plan folds a side position already on the free "
+                "list (reused-slot aliasing); refusing to fold")
+        # fallible device planes first …
         pos_j = jnp.asarray(pos_l)
         self._apply_insert(cl, sl, side_ids[pos_l].astype(np.int32),
                            self.side.codes[pos_j])
         self.side = self.side._replace(
             valid=self.side.valid.at[pos_j].set(False))
+        # … then the infallible host bookkeeping
+        for c, take in plan:
+            del self._free[c][-take:]
+        for c, slot, pos in zip(cl, sl, pos_l):
+            self._loc[int(side_ids[pos])] = (c, slot)
+        self._side_free.extend(pos_l)
+        self._delta_epoch += 1
         return len(pos_l)
 
 
@@ -985,7 +1189,7 @@ class MutableJunoIndex(MutableIndexBase):
         tuple of jnp.ndarray
             ``(scores (Q, k), ids (Q, k))`` as :func:`search`.
         """
-        side = self.side if self.side_fill else None
+        side = self.delta_view()
         if prefilter == "rt" and kw.get("rt_grid") is None:
             kw["rt_grid"] = self.ensure_rt_grid(metric=kw.get("metric", "l2"))
         return search(self.data, queries, side=side, prefilter=prefilter,

@@ -306,6 +306,18 @@ class DistributedMutableIndex(MutableIndexBase):
         return make_distributed_search(self.mesh, local_nprobe, k,
                                        with_side=True, **kw)
 
+    def merge_lanes(self) -> list[tuple[int, int]]:
+        """Per-shard cluster ranges for the LSM merge scheduler.
+
+        ``repro.core.freshness.MergeScheduler`` detects this hook and
+        steps one lane per call, round-robin — each incremental fold's
+        row scatter then lands on a single shard, giving the per-shard
+        background-merge schedule without a scheduler object per shard.
+        """
+        n_clusters = self.data.ivf.point_ids.shape[0]
+        cl = n_clusters // self.n_shards
+        return [(s * cl, (s + 1) * cl) for s in range(self.n_shards)]
+
     # ---- rebuild / hot swap ---------------------------------------------
     def swap_data(self, new_data: JunoIndexData, *,
                   side_capacity: int | None = None) -> None:
@@ -403,10 +415,23 @@ class DistributedMutableIndex(MutableIndexBase):
             self.side = self.side._replace(
                 valid=self.side.valid.at[pos_j].set(False))
             self._side_free.extend(freed_pos)
+        # likewise, minor-generation points packed into this shard's base
+        # rows are tombstoned in their generation (drained generations drop)
+        freed_minor = 0
+        for m in self._minors:
+            mpos = [int(p) for p in np.where(m.valid)[0]
+                    if self._loc.get(int(m.ids[p]), (-1, -1))[0] >= 0]
+            if mpos:
+                m.valid[np.asarray(mpos)] = False
+                freed_minor += len(mpos)
+        if freed_minor:
+            self._minors = [m for m in self._minors if m.live]
+        if freed_pos or freed_minor:
+            self._delta_epoch += 1
         self.data = self._row_update_fn(
             self.data, np.arange(lo, hi, dtype=np.int32), row_ids,
             row_ids >= 0, row_codes)
-        return len(freed_pos)
+        return len(freed_pos) + freed_minor
 
     def rebuild(self) -> int:
         """Drain the side buffer: per-shard repacks, then grow if stuck.
@@ -425,7 +450,7 @@ class DistributedMutableIndex(MutableIndexBase):
             Total side-buffer points drained (per-shard + escalation).
         """
         drained = sum(self.rebuild_shard(s) for s in range(self.n_shards))
-        stuck = self.side_fill
+        stuck = self.delta_fill      # L0 + minor points the repack left
         if stuck:
             from repro.build.rebuild import rebuild_index
             self.swap_data(rebuild_index(self))

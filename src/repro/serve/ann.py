@@ -69,6 +69,7 @@ class AnnRequest:
     recall_target: float = 0.9          # router input when mode == "auto"
     # filled in by the engine
     rt_probes: int = -1                 # cached rt survivor count (-1 unset)
+    rt_epoch: int = -1                  # index rt_mutations the cache is for
     scores: Optional[np.ndarray] = None
     ids: Optional[np.ndarray] = None
     done: bool = False
@@ -108,7 +109,8 @@ class AnnServeEngine:
                  thres_scale: float = 1.0, side_capacity: int = 256,
                  batch_buckets: tuple[int, ...] | None = None,
                  fused: bool = False, prefilter: str = "scan",
-                 rt_scale: float = 1.0):
+                 rt_scale: float = 1.0, max_minors: int = 0,
+                 merge_clusters_per_step: int = 32):
         """Wrap an index (mutable or not) in a serving engine.
 
         Parameters
@@ -140,6 +142,16 @@ class AnnServeEngine:
             well.
         rt_scale : float
             Radius knob for "rt" (monotone; large ⇒ no pruning).
+        max_minors : int
+            With a value > 0, enable the LSM freshness tiers
+            (``repro.core.freshness``): a full L0 side buffer is
+            promoted into one of up to ``max_minors`` sealed minor
+            generations instead of rejecting inserts, and a
+            ``MergeScheduler`` folds generations back into the base
+            incrementally between ticks. 0 (default) keeps the legacy
+            single-SideBuffer behavior.
+        merge_clusters_per_step : int
+            Fold budget per between-ticks merge step (clusters).
         """
         # any MutableIndexBase works as the served index: the sharded
         # DistributedMutableIndex flows through here too (the fleet layer's
@@ -154,9 +166,18 @@ class AnnServeEngine:
             raise ValueError(f"unknown prefilter {prefilter!r}")
         self.prefilter = prefilter
         self.rt_scale = rt_scale
-        self._rt_state = None     # cached (grid, routing_state) for route()
+        #: cached (grid, routing_state, rt_mutations) for route(); the
+        #: mutation counter invalidates it when inserts grow grid reaches
+        self._rt_state = None
         if prefilter == "rt":
             self.index.ensure_rt_grid(metric=metric)
+        #: between-ticks merge driver when the LSM tiers are enabled
+        self.scheduler = None
+        if max_minors:
+            from repro.core.freshness import MergeScheduler
+            self.index.enable_tiers(max_minors)
+            self.scheduler = MergeScheduler(
+                self.index, clusters_per_step=merge_clusters_per_step)
         #: route the high-recall tiers (H and H2) through the fused
         #: two-stage kernel path: both collapse onto ONE jit signature
         #: (mode "H2", rerank = FUSED_RERANK_MULT·k), so their requests
@@ -256,19 +277,27 @@ class AnnServeEngine:
         nprobe = next((b for b in self.NPROBE_BUCKETS if b >= nprobe),
                       self.NPROBE_BUCKETS[-1])
         if self.prefilter == "rt":
-            if req.rt_probes < 0:
+            muts = getattr(self.index, "rt_mutations", 0)
+            if req.rt_probes < 0 or req.rt_epoch != muts:
+                # a request's cached probe budget is only valid for the
+                # index mutation state it was computed against: inserts
+                # grow grid reaches, so a budget cached before an insert
+                # would under-probe the freshly inserted points
                 from repro import rt as rt_lib
                 # rebuilt lazily after swap_index() dropped it
                 grid = self.index.ensure_rt_grid(metric=self.metric)
-                if self._rt_state is None or self._rt_state[0] is not grid:
+                if (self._rt_state is None or self._rt_state[0] is not grid
+                        or self._rt_state[2] != muts):
                     # inserts replace the grid object (update_radii), so
-                    # identity is the cache key for the host routing state
+                    # identity plus the mutation counter keys the cached
+                    # host routing state
                     self._rt_state = (grid, rt_lib.routing_state(
-                        grid, self.index.data))
+                        grid, self.index.data), muts)
                 req.rt_probes = int(rt_lib.probe_budget(
                     grid, self.index.data, req.queries, metric=self.metric,
                     scale=self.rt_scale, thres_scale=self.thres_scale,
                     max_probes=nprobe, state=self._rt_state[1]).max())
+                req.rt_epoch = muts
             shrunk = next((b for b in self.RT_NPROBE_BUCKETS
                            if b >= max(req.rt_probes, 1)),
                           self.RT_NPROBE_BUCKETS[-1])
@@ -301,10 +330,12 @@ class AnnServeEngine:
 
         k, mode, nprobe = sig
         batch = np.concatenate([r.queries for r in picked], axis=0)
-        # an empty side buffer contributes nothing: drop the argument so the
+        # an empty delta tier contributes nothing: drop the argument so the
         # jitted program skips side scoring entirely (side=None and side≠None
-        # are separate traces; crossing over costs one compile, not a rebuild)
-        side = self.index.side if self.index.side_fill else None
+        # are separate traces; crossing over costs one compile, not a
+        # rebuild). With the LSM tiers enabled this is the combined
+        # fixed-capacity L0 ⊕ minors view, so merge cycles never retrace.
+        side = self.index.delta_view()
         # a single request larger than the top bucket is served in top-bucket
         # chunks, so the jit-signature lattice stays closed for any request
         out_s, out_i = [], []
@@ -336,6 +367,11 @@ class AnnServeEngine:
         self.stats["queries"] += rows
         self.stats["requests"] += len(picked)
         self.stats["ticks"] += 1
+        if self.scheduler is not None:
+            # background merge: one bounded step between ticks (the same
+            # control-path hook pattern as swap_index), so promotions and
+            # folds amortize across serving instead of stopping the world
+            self.scheduler.maybe_step()
         return rows
 
     def _dispatch(self, qb, k, mode, nprobe, side):
@@ -389,15 +425,19 @@ class AnnServeEngine:
         return n
 
     def compact(self, *, rebuild: bool | str = "auto") -> int:
-        """Drain side-buffer spills back into proper cluster slots.
+        """Schedule merge work instead of rebuilding the world.
 
-        First folds spills into already-free slots (the cheap path — a
-        search no-op by construction). With ``rebuild="auto"`` (default),
-        any spills that remain stuck — their cluster has no free slot —
-        trigger a full :meth:`swap_index` rebuild, which re-packs every
-        cluster (dropping tombstones, growing capacity if needed) so the
-        side buffer always ends empty; ``rebuild=True`` forces the
-        rebuild, ``rebuild=False`` restores the old fold-only behavior.
+        With the LSM tiers enabled (``max_minors > 0``) this drains the
+        merge scheduler: L0 folds into free base slots, full L0s promote
+        into minor generations, and generations fold incrementally into
+        the base — a :meth:`swap_index` rebuild happens only when the
+        tiers themselves are exhausted (every minor slot taken AND the
+        stuck points' clusters full). Without tiers it keeps the legacy
+        behavior: fold spills into already-free slots (a search no-op by
+        construction), then — with ``rebuild="auto"`` (default) — any
+        spills that remain stuck trigger the full rebuild so the side
+        buffer always ends empty. ``rebuild=True`` forces the rebuild,
+        ``rebuild=False`` never rebuilds.
 
         Parameters
         ----------
@@ -407,9 +447,12 @@ class AnnServeEngine:
         Returns
         -------
         int
-            Total points moved out of the side buffer.
+            Total points moved between tiers.
         """
-        moved = self.index.compact()
+        if self.scheduler is not None:
+            moved = self.scheduler.drain()
+        else:
+            moved = self.index.compact()
         stuck = self.index.side_fill
         if rebuild is True or (rebuild == "auto" and stuck):
             self.swap_index()

@@ -243,9 +243,10 @@ class _ShardedAnnServeEngine(AnnServeEngine):
                 rerank=self.FUSED_RERANK_MULT * k if mode == "H2" else 0,
                 with_side=True)
             self._dcache[(k, mode, nprobe)] = fn
-        # always pass the (possibly empty) replicated side buffer: the
+        # always pass the (possibly empty) replicated delta view: the
         # sharded path has ONE signature per knob point, no side=None split
-        return fn(self.index.data, qb, self.index.side)
+        return fn(self.index.data, qb,
+                  self.index.delta_view(elide_empty=False))
 
 
 class AnnServeFleet:

@@ -332,7 +332,17 @@ class PagedJunoIndex(MutableIndexBase):
     tombstones accumulate in the resident valid mask until the next
     offline rebuild lands as a new artifact generation
     (:meth:`swap_data`). ``compact()`` is therefore always a no-op here;
-    draining the side buffer is the offline rebuild's job.
+    draining the delta tiers is the offline rebuild's job.
+
+    With the LSM freshness tiers enabled
+    (``enable_tiers(max_minors, minor_store=...)``, see
+    ``repro.core.freshness``), a full L0 no longer stalls inserts until
+    the next rebuild: it is sealed into a minor generation committed
+    through the :class:`~repro.build.store.ArtifactStore` and
+    demand-paged back on first search touch with the same per-row sha256
+    fail-closed verification the base shards get — the paged tier's
+    insert headroom grows from B to B·(1 + max_minors) between rebuilds,
+    while incremental folds into the sealed base naturally no-op.
     """
 
     def __init__(self, paged: PagedIndexData, *, side_capacity: int = 256):
@@ -478,7 +488,7 @@ class PagedJunoIndex(MutableIndexBase):
         nprobe = min(nprobe, self.data.ivf.centroids.shape[0])
         rt_grid = (self.ensure_rt_grid(metric=metric)
                    if prefilter == "rt" else None)
-        side = self.side if self.side_fill else None
+        side = self.delta_view()
         base, cids = _paged_filter(self.data.ivf, q, nprobe=nprobe,
                                    metric=metric)
         codes = jnp.asarray(self.paged.gather(np.asarray(cids)))
@@ -518,7 +528,8 @@ class PagedAnnServeEngine(AnnServeEngine):
     """
 
     def __init__(self, index, *, exact_rerank: int = 0,
-                 side_capacity: int = 256, **kw):
+                 side_capacity: int = 256, minor_store=None,
+                 minor_name: str = "minors", **kw):
         """Wrap a paged index (or raw :class:`PagedIndexData`).
 
         Parameters
@@ -531,9 +542,18 @@ class PagedAnnServeEngine(AnnServeEngine):
             Requires the index's ``PagedIndexData(vectors=...)`` source.
         side_capacity : int
             Side-buffer capacity when wrapping a bare ``PagedIndexData``.
+        minor_store : repro.build.store.ArtifactStore, optional
+            With ``max_minors > 0``, promoted minor generations are
+            committed through this store and demand-paged back on first
+            search touch (per-row sha256-verified) instead of staying
+            resident — the out-of-core freshness tier. Default: minors
+            stay resident (they are small: B rows each).
+        minor_name : str
+            Store name minors are committed under.
         **kw
             Remaining :class:`AnnServeEngine` knobs (``metric``,
-            ``impl``, ``batch_buckets``, ``fused``, ``prefilter``, ...).
+            ``impl``, ``batch_buckets``, ``fused``, ``prefilter``,
+            ``max_minors``, ...).
         """
         if isinstance(index, PagedIndexData):
             index = PagedJunoIndex(index, side_capacity=side_capacity)
@@ -544,6 +564,8 @@ class PagedAnnServeEngine(AnnServeEngine):
             raise ValueError("exact_rerank needs a raw-vector source: "
                              "PagedIndexData(vectors=...)")
         self.exact_rerank = int(exact_rerank)
+        if minor_store is not None:
+            index._minor_sink = (minor_store, minor_name)
         super().__init__(index, side_capacity=side_capacity, **kw)
 
     def _dispatch(self, qb, k, mode, nprobe, side):
@@ -603,19 +625,25 @@ class PagedAnnServeEngine(AnnServeEngine):
         return out_s, np.take_along_axis(ids_np, order, axis=1)
 
     def compact(self, *, rebuild: bool | str = "auto") -> int:
-        """Paged compaction is a no-op: spills drain at the next swap.
+        """Schedule merge work; never rebuilds in-process.
 
-        The cluster shards are read-only, so there is never a free slot
-        to fold a side-buffer point into, and the in-process rebuild the
-        resident engine escalates to would need every PQ code resident.
+        The cluster shards are read-only, so folds into the base are
+        always no-ops here, and the in-process rebuild the resident
+        engine escalates to would need every PQ code resident.
         ``rebuild=True`` raises to make that contract explicit; build
         the next generation offline and :meth:`swap_index` it instead.
+        With the LSM tiers enabled (``max_minors > 0``) this drains the
+        merge scheduler, which promotes a stuck L0 into an
+        artifact-backed minor generation — the paged tier's only
+        in-process way to reclaim side-buffer headroom between rebuilds.
         """
         if rebuild is True:
             raise RuntimeError(
                 "paged serving cannot rebuild in-process; build the next "
                 "generation offline (ArtifactStore.put) and swap_index() "
                 "a new PagedIndexData")
+        if self.scheduler is not None:
+            return self.scheduler.drain()
         return self.index.compact()
 
     def swap_index(self, new_data=None) -> int:

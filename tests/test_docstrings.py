@@ -16,6 +16,9 @@ import repro.build as build
 import repro.core as core
 import repro.dist.distributed_index as dist_index
 import repro.rt as rt
+from repro.build.merge import fold_step, load_minor, save_minor
+from repro.core.freshness import (MergeScheduler, MinorGeneration,
+                                  combined_delta, promote_l0)
 from repro.core.juno import MutableIndexBase, MutableJunoIndex
 from repro.dist.distributed_index import DistributedMutableIndex
 from repro.kernels import ops
@@ -34,6 +37,12 @@ PUBLIC = [
     MutableJunoIndex, MutableIndexBase.insert, MutableIndexBase.delete,
     MutableIndexBase.compact, MutableJunoIndex.search,
     MutableJunoIndex.ensure_rt_grid,
+    # LSM freshness tiers + incremental merges
+    MutableIndexBase.enable_tiers, MutableIndexBase.delta_view,
+    MutableIndexBase.delta_snapshot, MinorGeneration, combined_delta,
+    promote_l0, MergeScheduler, MergeScheduler.maybe_step,
+    MergeScheduler.step, MergeScheduler.drain,
+    fold_step, save_minor, load_minor,
     # serving engine
     AnnServeEngine, AnnRequest, AnnServeEngine.__init__,
     AnnServeEngine.submit, AnnServeEngine.route, AnnServeEngine.step,
@@ -100,9 +109,11 @@ def test_public_symbol_has_docstring(obj):
 
 
 def test_public_modules_have_docstrings():
+    import repro.build.merge
     import repro.build.pipeline
     import repro.build.rebuild
     import repro.build.store
+    import repro.core.freshness
     import repro.core.juno
     import repro.dist.distributed_index
     import repro.kernels.ref
@@ -111,9 +122,11 @@ def test_public_modules_have_docstrings():
     import repro.serve.ann
     import repro.serve.fleet
     import repro.serve.paged
-    for mod in [core, rt, ops, build, repro.core.juno, repro.serve.ann,
+    for mod in [core, rt, ops, build, repro.core.juno, repro.core.freshness,
+                repro.serve.ann,
                 repro.serve.fleet, repro.serve.paged, repro.rt.grid,
                 repro.rt.intersect,
                 repro.kernels.ref, repro.dist.distributed_index,
-                repro.build.pipeline, repro.build.store, repro.build.rebuild]:
+                repro.build.pipeline, repro.build.store, repro.build.rebuild,
+                repro.build.merge]:
         assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__

@@ -1,0 +1,755 @@
+"""LSM freshness engine: tiered deltas, incremental merges, mutability fixes.
+
+Tentpole coverage: L0 → minor-generation promotion, the fixed-capacity
+combined delta view, MergeScheduler fold cycles (single-device and
+per-shard lanes), engine wiring (``max_minors``), rt verdict parity for
+tiered points, and artifact-backed minors on the paged tier.
+
+Regression pins for the PR's three mutability bugfixes — each fails on the
+pre-fix code:
+
+* stale rt probe budgets surviving inserts (``AnnRequest.rt_epoch``),
+* ``insert`` mutating state before a failing device scatter
+  (device-first / host-last commit ordering),
+* ``compact`` silently double-popping a corrupted free list
+  (fail-closed plan validation).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.build import ArtifactError, ArtifactStore
+from repro.build.merge import fold_step
+from repro.build.rebuild import rebuild_index
+from repro.core import JunoConfig, MutableJunoIndex, build, search
+from repro.core.freshness import MergeScheduler, combined_delta, promote_l0
+from repro.data import DEEP_LIKE, make_dataset
+from repro.serve.ann import AnnServeEngine
+
+FULL = 1e6   # rt_scale at which every sphere covers every cell
+
+
+@pytest.fixture(scope="module")
+def base():
+    pts, q = make_dataset(DEEP_LIKE, 3000, 40, key=jax.random.PRNGKey(17))
+    cfg = JunoConfig(n_clusters=16, n_entries=32, calib_queries=16,
+                     kmeans_iters=4, capacity_mult=1.1)
+    return np.asarray(pts), np.asarray(q), build(pts, cfg)
+
+
+@functools.lru_cache(maxsize=1)
+def _tiny_base():
+    """Small shared base for hypothesis tests (no fixtures there)."""
+    pts, q = make_dataset(DEEP_LIKE, 2500, 8, key=jax.random.PRNGKey(21))
+    cfg = JunoConfig(n_clusters=16, n_entries=16, calib_queries=12,
+                     kmeans_iters=4, capacity_mult=1.05)
+    return np.asarray(pts), np.asarray(q), build(pts, cfg)
+
+
+def _snapshot(mid):
+    """Full host+device state of a mutable index, for all-or-nothing checks."""
+    return dict(
+        free=[list(f) for f in mid._free],
+        loc=dict(mid._loc),
+        side_free=list(mid._side_free),
+        next_id=mid._next_id,
+        minors=[(m.gen, m.valid.copy()) for m in mid._minors],
+        valid=np.asarray(mid.data.ivf.valid).copy(),
+        pids=np.asarray(mid.data.ivf.point_ids).copy(),
+        codes=np.asarray(mid.data.cluster_codes).copy(),
+        s_valid=np.asarray(mid.side.valid).copy(),
+        s_cluster=np.asarray(mid.side.cluster).copy(),
+        s_ids=np.asarray(mid.side.ids).copy(),
+    )
+
+
+def _diff(a, b):
+    out = []
+    for key in a:
+        va, vb = a[key], b[key]
+        if isinstance(va, np.ndarray):
+            if not np.array_equal(va, vb):
+                out.append(key)
+        elif key == "minors":
+            if len(va) != len(vb) or any(
+                    ga != gb or not np.array_equal(xa, xb)
+                    for (ga, xa), (gb, xb) in zip(va, vb)):
+                out.append(key)
+        elif va != vb:
+            out.append(key)
+    return out
+
+
+def _assert_search_equiv(s0, i0, s1, i1):
+    """Bit-identical scores; id sets equal at every non-boundary score level
+    (lax.top_k may permute EXACTLY tied scores when flat positions move)."""
+    s0, i0, s1, i1 = (np.asarray(x) for x in (s0, i0, s1, i1))
+    np.testing.assert_array_equal(s0, s1)
+    for r in range(s0.shape[0]):
+        boundary = s0[r, -1]
+        for v in np.unique(s0[r][s0[r] != boundary]):
+            assert set(i0[r][s0[r] == v]) == set(i1[r][s1[r] == v]), (r, v)
+
+
+def _overfill_points(mid, rng, extra, cluster=None):
+    """Points near the tightest (or given) cluster's centroid: its free
+    slots + ``extra`` of them, so ``extra`` land in the delta tier."""
+    if cluster is None:
+        cluster = int(np.argmin([mid.free_slots(c)
+                                 for c in range(len(mid._free))]))
+    cent = np.asarray(mid.data.ivf.centroids[cluster])
+    n = mid.free_slots(cluster) + extra
+    return cluster, (cent[None] + 0.02 * rng.standard_normal(
+        (n, cent.shape[0]))).astype(np.float32)
+
+
+def _check_bookkeeping(mid, tag=""):
+    """Free-list / location-map consistency invariants across all tiers."""
+    valid = np.asarray(mid.data.ivf.valid)
+    pids = np.asarray(mid.data.ivf.point_ids)
+    cap = valid.shape[1]
+    for c, f in enumerate(mid._free):
+        assert len(f) == len(set(f)), f"{tag}: dup in _free[{c}]"
+        occ = set(np.where(valid[c])[0].tolist())
+        assert not (set(f) & occ), f"{tag}: _free[{c}] overlaps occupied"
+        assert len(f) + len(occ) == cap, f"{tag}: free+occ != P in {c}"
+    sf = mid._side_free
+    assert len(sf) == len(set(sf)), f"{tag}: dup in _side_free"
+    socc = set(np.where(np.asarray(mid.side.valid))[0].tolist())
+    assert not (set(sf) & socc), f"{tag}: _side_free overlaps side-valid"
+    assert len(sf) + len(socc) == mid.side.capacity
+    s_ids = np.asarray(mid.side.ids)
+    n_cluster = n_side = n_minor = 0
+    for pid, (c, slot) in mid._loc.items():
+        if c >= 0:
+            assert valid[c, slot] and pids[c, slot] == pid, (tag, pid)
+            n_cluster += 1
+        elif c == -1:
+            assert s_ids[slot] == pid, (tag, pid)
+            n_side += 1
+        else:
+            m = next(mm for mm in mid._minors if mm.gen == -2 - c)
+            assert m.valid[slot] and m.ids[slot] == pid, (tag, pid)
+            n_minor += 1
+    assert n_cluster == int(valid.sum()), tag
+    assert n_side == len(socc), tag
+    assert n_minor == sum(m.live for m in mid._minors), tag
+
+
+# ---------------------------------------------------------------------------
+# tentpole: tiers, promotion, combined view, scheduler
+# ---------------------------------------------------------------------------
+
+def test_combined_delta_capacity_is_merge_state_invariant(base):
+    """The combined delta view must keep ONE shape across every merge state
+    (empty L0, L0+minor, post-fold) — the warm-jit-signature invariant."""
+    _, _, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=16)
+    mid.enable_tiers(2)
+    cap = 16 * 3
+    assert mid.delta_view(elide_empty=False).capacity == cap
+
+    rng = np.random.default_rng(0)
+    _, newpts = _overfill_points(mid, rng, 16)
+    mid.insert(newpts)
+    assert mid.side_fill == 16
+    view = mid.delta_view()
+    assert view.capacity == cap
+    promote_l0(mid)
+    assert mid.side_fill == 0 and len(mid._minors) == 1
+    view = mid.delta_view()
+    assert view.capacity == cap
+    # tombstoned minor slots disappear from the view's cluster plane
+    m = mid._minors[0]
+    victim = int(m.ids[np.where(m.valid)[0][0]])
+    mid.delete([victim])
+    view = mid.delta_view()
+    assert view.capacity == cap
+    pos = int(np.where(np.asarray(view.ids) == victim)[0][0])
+    assert int(np.asarray(view.cluster)[pos]) == -1
+    # more minors than the configuration allows is a hard error
+    with pytest.raises(RuntimeError, match="max_minors"):
+        combined_delta(mid.side, mid._minors * 3, 2)
+
+
+def test_insert_promotes_full_l0_and_search_matches_rebuild(base):
+    """A full L0 no longer rejects inserts: it seals into a minor
+    generation, and the tiered index's search equals a from-scratch
+    rebuild of the same logical point set."""
+    pts, q, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    mid.enable_tiers(2)
+    rng = np.random.default_rng(1)
+    c, newpts = _overfill_points(mid, rng, 8)     # fills base slots + L0
+    cent = np.asarray(idx.ivf.centroids[c])
+    more = (cent[None] + 0.02 * rng.standard_normal(
+        (4, cent.shape[0]))).astype(np.float32)
+    newpts = np.concatenate([newpts, more])
+    ids = mid.insert(newpts[:-4])
+    assert mid.side_fill == 8 and not mid._minors
+    ids += mid.insert(more)            # full L0 seals into a minor first
+    assert len(mid._minors) == 1 and mid.side_fill == 4
+    assert mid.delta_fill == 12
+    _check_bookkeeping(mid, "post-promote")
+
+    # every tiered point is retrievable by its own vector
+    _, got = mid.search(newpts[-12:], nprobe=16, k=10, mode="H")
+    got = np.asarray(got)
+    for j, pid in enumerate(ids[-12:]):
+        assert pid in got[j]
+
+    # end-state parity with a stop-the-world rebuild of the same set
+    qq = np.concatenate([q[:16], newpts[:4]], axis=0)
+    s0, i0 = mid.search(qq, nprobe=8, k=20, mode="H")
+    rebuilt = rebuild_index(mid)
+    s1, i1 = search(rebuilt, jnp.asarray(qq), nprobe=8, k=20, mode="H",
+                    batch=qq.shape[0])
+    _assert_search_equiv(s0, i0, s1, i1)
+
+
+def test_insert_raises_when_tiers_exhausted(base):
+    """With every minor slot taken AND L0 full, insert keeps the legacy
+    all-or-nothing RuntimeError (nothing mutated)."""
+    _, _, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=4)
+    mid.enable_tiers(1)
+    rng = np.random.default_rng(2)
+    c, newpts = _overfill_points(mid, rng, 4)
+    mid.insert(newpts)                 # fills base slots + L0
+    cent = np.asarray(idx.ivf.centroids[c])
+    mid.insert((cent[None] + 0.02 * rng.standard_normal(
+        (4, cent.shape[0]))).astype(np.float32))   # promotes, refills L0
+    assert len(mid._minors) == 1 and mid.side_fill == 4
+    snap = _snapshot(mid)
+    cent = np.asarray(idx.ivf.centroids[c])
+    more = (cent[None] + 0.02 * rng.standard_normal(
+        (2, cent.shape[0]))).astype(np.float32)
+    with pytest.raises(RuntimeError, match="does not fit"):
+        mid.insert(more)
+    assert _diff(snap, _snapshot(mid)) == []
+
+
+def test_scheduler_folds_minors_incrementally(base):
+    """fold_step drains minor points into freed base slots in bounded
+    per-cluster steps; a full drain empties every tier and is a search
+    no-op (scores bit-identical)."""
+    pts, q, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    mid.enable_tiers(2)
+    rng = np.random.default_rng(3)
+    c, newpts = _overfill_points(mid, rng, 8)
+    cent = np.asarray(idx.ivf.centroids[c])
+    more = (cent[None] + 0.02 * rng.standard_normal(
+        (2, cent.shape[0]))).astype(np.float32)
+    newpts = np.concatenate([newpts, more])
+    ids = mid.insert(newpts[:-2])      # fills base + L0
+    ids += mid.insert(more)            # promotes L0, lands in the fresh one
+    assert len(mid._minors) == 1
+    # tombstone enough ORIGINAL members of the overfilled cluster that the
+    # whole delta tier has base slots to fold into
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:12]
+    mid.delete(victims)
+
+    qq = np.concatenate([q[:16], newpts[:4]], axis=0)
+    s0, i0 = mid.search(qq, nprobe=8, k=20, mode="H")
+
+    sched = MergeScheduler(mid, clusters_per_step=1)
+    assert sched.pending == mid.delta_fill > 0
+    moved = sched.drain()
+    assert moved >= 10
+    assert mid.delta_fill == 0 and not mid._minors
+    assert sched.stats["drains"] == 1 and sched.stats["steps"] >= 1
+    _check_bookkeeping(mid, "post-drain")
+
+    s1, i1 = mid.search(qq, nprobe=8, k=20, mode="H")
+    _assert_search_equiv(s0, i0, s1, i1)
+    # drained points still retrievable, now from base slots
+    _, got = mid.search(newpts, nprobe=16, k=10, mode="H")
+    got = np.asarray(got)
+    assert all(pid in got[j] for j, pid in enumerate(ids))
+
+
+def test_fold_step_respects_lane_and_budget(base):
+    """A lane-restricted fold touches only its cluster range, and the
+    per-step cluster budget bounds the work."""
+    pts, _, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    mid.enable_tiers(2)
+    rng = np.random.default_rng(4)
+    c, newpts = _overfill_points(mid, rng, 8)
+    mid.insert(newpts)                 # fills base slots + L0
+    promote_l0(mid)
+    assert len(mid._minors) == 1
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:8]
+    mid.delete(victims)
+
+    before = mid._minors[0].live
+    # a lane excluding the owning cluster folds nothing
+    lane = (c + 1, c + 1 + 1)
+    assert fold_step(mid, max_clusters=16, lane=lane) == 0
+    assert mid._minors and mid._minors[0].live == before
+    # the owning lane folds (bounded by freed slots)
+    moved = fold_step(mid, max_clusters=16, lane=(c, c + 1))
+    assert moved == min(before, 8)
+    _check_bookkeeping(mid, "post-lane-fold")
+
+
+def test_engine_merge_cycles_sustain_mixed_load(base):
+    """AnnServeEngine(max_minors=...): sustained insert+delete+query churn
+    across many promotion/fold cycles — every live inserted id stays
+    retrievable, the scheduler makes progress between ticks, and the
+    delta tier never exceeds its configured capacity."""
+    pts, q, idx = base
+    eng = AnnServeEngine(idx, max_minors=2, side_capacity=8,
+                         merge_clusters_per_step=4)
+    mid = eng.index
+    cap = 8 * 3
+    rng = np.random.default_rng(5)
+    c = int(np.argmin([mid.free_slots(cc) for cc in range(16)]))
+    cent = np.asarray(idx.ivf.centroids[c])
+    # exhaust the target cluster's padding headroom so the delta tiers do
+    # the absorbing, then keep inserting until TWO insert-path promotions
+    # have happened (full L0 + full cluster seals a minor mid-insert)
+    own: list[tuple[int, np.ndarray]] = []
+    if mid.free_slots(c):
+        prefill = (cent[None] + 0.02 * rng.standard_normal(
+            (mid.free_slots(c), cent.shape[0]))).astype(np.float32)
+        own += list(zip(eng.insert(prefill), prefill))
+    for _ in range(10):
+        if len(mid._minors) >= 2:
+            break
+        newpts = (cent[None] + 0.02 * rng.standard_normal(
+            (4, cent.shape[0]))).astype(np.float32)
+        own += list(zip(eng.insert(newpts), newpts))
+        assert mid.delta_fill <= cap
+    assert len(mid._minors) == 2
+
+    # churn: deletes of ORIGINAL base members free fold targets, the
+    # between-ticks scheduler folds the generations back into them while
+    # queries keep finding every live point — across ≥ 8 merge cycles
+    for cycle in range(8):
+        row_ids = np.asarray(mid.data.ivf.point_ids[c])
+        row_valid = np.asarray(mid.data.ivf.valid[c])
+        victims = [int(p) for p in row_ids[row_valid]
+                   if p < len(pts)][:6]
+        eng.delete(victims)
+        newpts = (cent[None] + 0.02 * rng.standard_normal(
+            (4, cent.shape[0]))).astype(np.float32)
+        own += list(zip(eng.insert(newpts), newpts))
+        assert mid.delta_fill <= cap
+        req = eng.submit(np.stack([p for _, p in own[-4:]]),
+                         k=10, mode="H", nprobe=16)
+        assert eng.run() >= 4
+        got = np.asarray(req.ids)
+        for j, (pid, _) in enumerate(own[-4:]):
+            assert pid in got[j], (cycle, pid)
+    assert mid._minor_gen >= 2         # generations sealed across the run
+    assert eng.scheduler.stats["steps"] >= 1
+    assert eng.scheduler.stats["folded"] + eng.scheduler.stats[
+        "compacted"] >= 1
+    # compact() now schedules merge work; whatever cannot fold escalates
+    eng.compact()
+    assert mid.side_fill == 0
+    _check_bookkeeping(mid, "post-compact")
+
+
+def test_rt_verdict_parity_for_minor_points(base):
+    """Minor-generation points must get the SAME rt sphere verdict as
+    in-cluster siblings: full-coverage rt == dense scan while tiered, and
+    a drain is a search no-op under the calibrated radius."""
+    pts, q, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    mid.enable_tiers(2)
+    mid.ensure_rt_grid()
+    rng = np.random.default_rng(6)
+    c, newpts = _overfill_points(mid, rng, 8)
+    mid.insert(newpts)                 # fills base slots + L0
+    promote_l0(mid)
+    assert len(mid._minors) == 1
+    qq = np.concatenate([q[:8], newpts[:4]], axis=0)
+    _, want = mid.search(qq, nprobe=16, k=10, mode="H", batch=qq.shape[0])
+    _, got = mid.search(qq, nprobe=16, k=10, mode="H", prefilter="rt",
+                        rt_scale=FULL, batch=qq.shape[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # calibrated radius: drain must not change any answer
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:10]
+    mid.delete(victims)
+    s1, i1 = mid.search(qq, nprobe=16, k=10, mode="H", prefilter="rt",
+                        batch=qq.shape[0])
+    assert MergeScheduler(mid).drain() >= 8
+    assert mid.delta_fill == 0
+    s2, i2 = mid.search(qq, nprobe=16, k=10, mode="H", prefilter="rt",
+                        batch=qq.shape[0])
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    for r1, r2 in zip(np.asarray(i1), np.asarray(i2)):
+        assert set(r1) == set(r2)
+
+
+def test_distributed_merge_lanes(base):
+    """DistributedMutableIndex exposes per-shard merge lanes that
+    partition the cluster range; a lane-scheduled drain empties the tiers
+    and matches the single-device tiered index bit-for-bit."""
+    from repro.dist.distributed_index import DistributedMutableIndex
+
+    pts, q, idx = base
+    mesh = jax.make_mesh((1,), ("data",))
+    dmi = DistributedMutableIndex(idx, mesh, side_capacity=8)
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    for m in (dmi, mid):
+        m.enable_tiers(2)
+
+    lanes = dmi.merge_lanes()
+    assert len(lanes) == dmi.n_shards
+    covered = sorted(c for lo, hi in lanes for c in range(lo, hi))
+    assert covered == list(range(16))
+
+    rng = np.random.default_rng(7)
+    c, newpts = _overfill_points(mid, rng, 8)
+    ids_d = dmi.insert(newpts)
+    ids_s = mid.insert(newpts)
+    assert ids_d == ids_s
+    promote_l0(dmi)
+    promote_l0(mid)
+    assert len(dmi._minors) == len(mid._minors) == 1
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid] if p < len(pts)][:10]
+    dmi.delete(victims)
+    mid.delete(victims)
+
+    sch_d = MergeScheduler(dmi, clusters_per_step=4)
+    assert sch_d._lanes == lanes     # the per-shard schedule was adopted
+    moved_d = sch_d.drain()
+    moved_s = MergeScheduler(mid, clusters_per_step=4).drain()
+    assert moved_d == moved_s >= 8
+    assert dmi.delta_fill == mid.delta_fill == 0
+
+    dsearch = dmi.searcher(local_nprobe=16, k=10, mode="H")
+    qq = np.concatenate([q[:8], newpts[:2]], axis=0)
+    s_d, i_d = dsearch(dmi.data, qq, dmi.side)
+    s_s, i_s = mid.search(qq, nprobe=16, k=10, mode="H", batch=qq.shape[0])
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: stale rt probe budgets must not survive inserts
+# ---------------------------------------------------------------------------
+
+def test_rt_probe_budget_refreshes_after_insert(base):
+    """REGRESSION (pre-fix: ``route()`` kept any cached ``rt_probes``
+    forever): an insert that grows a cluster's grid reach must invalidate
+    budgets cached before it — a stale request re-routed after the insert
+    gets the same (larger) probe budget as a fresh one, so the fresh
+    point is probed, not silently skipped."""
+    from repro import rt as rt_lib
+
+    pts, q, idx = base
+    # rt_scale < 1 shrinks the calibrated sphere radii so most budgets sit
+    # at the bottom bucket — without headroom every query already routes at
+    # the probe cap and a grown reach is invisible to the bucketing
+    eng = AnnServeEngine(idx, prefilter="rt", rt_scale=0.25)
+    mid = eng.index
+    grid0 = mid.ensure_rt_grid()
+    cent = np.asarray(idx.ivf.centroids, np.float32)
+    proj = np.asarray(grid0.proj)
+    cp = cent @ proj
+    max_probes = eng.MODE_NPROBE["M"]
+
+    def bucket(v):
+        return next((b for b in eng.RT_NPROBE_BUCKETS if b >= max(v, 1)),
+                    eng.RT_NPROBE_BUCKETS[-1])
+
+    # find a (query, insert point) pair whose insert grows the query's
+    # probe budget across a bucket boundary: a far-flung point grows its
+    # owning cluster's projected reach until that cluster becomes a
+    # sphere hit at a deeper stage-A rank
+    found = None
+    for qi in range(q.shape[0]):
+        if found:
+            break
+        qq = q[qi:qi + 1].astype(np.float32)
+        probe = eng.submit(qq, k=10, mode="M")
+        eng.queue.clear()
+        eng.route(probe)
+        pre = probe.rt_probes
+        if min(bucket(pre), max_probes) >= max_probes:
+            continue                       # no headroom to grow into
+        score = np.sum(cent * cent, -1) - 2.0 * (qq @ cent.T)[0]
+        order = np.argsort(score)
+        qp = (qq @ proj)[0]
+        for rank in range(max(pre + 1, 3), max_probes + 1):
+            if found:
+                break
+            target = int(order[rank - 1])
+            d = float(np.linalg.norm(qp - cp[target]))
+            for dirn in (proj[:, 0], -proj[:, 0], proj[:, 1], -proj[:, 1]):
+                if found:
+                    break
+                for margin in (0.05, 4.0, 16.0, 64.0):
+                    reach = d + abs(float(grid0.radius_bias)) + margin
+                    p = (cent[target] + reach * dirn).astype(np.float32)
+                    # simulate exactly what _rt_on_insert will do: the
+                    # point lands in its nearest cluster (not necessarily
+                    # `target`) and grows THAT cluster's projected reach
+                    lab = int(np.argmin(np.sum((cent - p) ** 2, -1)))
+                    rlab = float(np.linalg.norm((p - cent[lab]) @ proj))
+                    g2 = rt_lib.update_radii(grid0, [lab], [rlab])
+                    post = int(rt_lib.probe_budget(
+                        g2, idx, qq, metric="l2", scale=eng.rt_scale,
+                        thres_scale=eng.thres_scale,
+                        max_probes=max_probes).max())
+                    if min(bucket(post), max_probes) > min(bucket(pre),
+                                                           max_probes):
+                        found = (probe, qq, p, pre)
+                        break
+    assert found is not None, "no viable insert geometry in candidate pool"
+    stale, qq, p, pre = found
+
+    muts0 = mid.rt_mutations
+    eng.insert(p[None])
+    assert mid.rt_mutations == muts0 + 1   # the invalidation signal
+
+    fresh = eng.submit(qq, k=10, mode="M")
+    eng.queue.clear()
+    sig_fresh = eng.route(fresh)
+    assert fresh.rt_probes > pre           # the insert really grew the budget
+    # THE regression: the pre-insert cached budget must be recomputed
+    sig_stale = eng.route(stale)
+    assert stale.rt_probes == fresh.rt_probes
+    assert sig_stale == sig_fresh
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: insert is all-or-nothing, even against a failing device plane
+# ---------------------------------------------------------------------------
+
+def test_insert_untouched_when_device_scatter_fails(base):
+    """REGRESSION (pre-fix: host bookkeeping committed before the device
+    scatter, so a raising ``_apply_insert`` — exactly what a sealed paged
+    shard does — left free lists/_loc/_next_id corrupted): a failing
+    scatter must leave EVERY piece of state untouched."""
+    _, _, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    rng = np.random.default_rng(8)
+    c = int(np.argmax([mid.free_slots(cc) for cc in range(16)]))
+    assert mid.free_slots(c) >= 2
+    cent = np.asarray(idx.ivf.centroids[c])
+    newpts = (cent[None] + 0.02 * rng.standard_normal(
+        (2, cent.shape[0]))).astype(np.float32)
+
+    snap = _snapshot(mid)
+
+    def boom(cl, sl, ids, codes):
+        raise RuntimeError("sealed shard: cluster rows are read-only")
+
+    mid._apply_insert = boom
+    with pytest.raises(RuntimeError, match="sealed shard"):
+        mid.insert(newpts)
+    assert _diff(snap, _snapshot(mid)) == []
+
+    del mid._apply_insert              # restore the class method
+    ids = mid.insert(newpts)           # and the same batch now lands cleanly
+    assert [mid._loc[i][0] for i in ids] == [c, c]
+
+
+def test_insert_overflow_mutates_nothing(base):
+    """The docstring's promise, pinned: an unplaceable batch raises with
+    host AND device state bit-identical to before the call."""
+    _, _, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=2)
+    rng = np.random.default_rng(9)
+    _, newpts = _overfill_points(mid, rng, 2)
+    mid.insert(newpts)                 # exactly fills cluster + side
+    snap = _snapshot(mid)
+    with pytest.raises(RuntimeError, match="does not fit"):
+        mid.insert(newpts[-3:])
+    assert _diff(snap, _snapshot(mid)) == []
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_interleaved_mutations_keep_bookkeeping_sound(seed):
+    """Random insert/delete/compact interleavings (with tiers enabled)
+    never corrupt the free lists, the location map, or the tier masks —
+    and every failed op leaves state bit-identical."""
+    pts, _, idx = _tiny_base()
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    mid.enable_tiers(2)
+    rng = np.random.default_rng(seed)
+    live: list[int] = sorted(mid._loc)
+    for step in range(40):
+        op = rng.random()
+        if op < 0.5:
+            base_pt = pts[rng.integers(0, len(pts))]
+            batch = (base_pt[None] + 0.05 * rng.standard_normal(
+                (int(rng.integers(1, 4)), pts.shape[1]))).astype(np.float32)
+            snap = _snapshot(mid)
+            try:
+                live += mid.insert(batch)
+            except RuntimeError:
+                assert _diff(snap, _snapshot(mid)) == [], step
+        elif op < 0.9 and live:
+            k = int(rng.integers(1, min(4, len(live)) + 1))
+            pick = [live[int(j)] for j in
+                    rng.choice(len(live), size=k, replace=False)]
+            mid.delete(pick)
+            live = [p for p in live if p not in set(pick)]
+        else:
+            mid.compact()
+        _check_bookkeeping(mid, f"seed={seed} step={step}")
+    assert sorted(mid._loc) == sorted(live)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: compact fails closed on corrupted slot bookkeeping
+# ---------------------------------------------------------------------------
+
+def _spilled_index(idx, seed, extra=3):
+    """A mutable index with ``extra`` side spills owned by one cluster and
+    freed base slots for compact to fold into."""
+    mid = MutableJunoIndex(idx, side_capacity=8)
+    rng = np.random.default_rng(seed)
+    c, newpts = _overfill_points(mid, rng, extra)
+    mid.insert(newpts)
+    assert mid.side_fill >= extra
+    row_ids = np.asarray(mid.data.ivf.point_ids[c])
+    row_valid = np.asarray(mid.data.ivf.valid[c])
+    victims = [int(p) for p in row_ids[row_valid]][:extra]
+    mid.delete(victims)
+    return mid, c
+
+
+def test_compact_rejects_double_freed_slot(base):
+    """REGRESSION (pre-fix: the Python-loop LIFO pops silently scattered
+    two side points into the SAME base slot when the free list held a
+    duplicate — one point vanished): a duplicated free slot must raise
+    with nothing mutated."""
+    _, _, idx = base
+    mid, c = _spilled_index(idx, seed=10)
+    mid._free[c] = [mid._free[c][-1]] * 2    # simulated double-free
+    snap = _snapshot(mid)
+    with pytest.raises(RuntimeError, match="twice"):
+        mid.compact()
+    assert _diff(snap, _snapshot(mid)) == []
+
+
+def test_compact_rejects_reused_side_slot(base):
+    """REGRESSION: a side position that is simultaneously live and on the
+    side free list (reused-slot aliasing) must be refused, not folded and
+    re-freed into a duplicate free-list entry."""
+    _, _, idx = base
+    mid, c = _spilled_index(idx, seed=11)
+    live_pos = int(np.where(np.asarray(mid.side.valid))[0][0])
+    mid._side_free.append(live_pos)          # simulated aliasing
+    snap = _snapshot(mid)
+    with pytest.raises(RuntimeError, match="aliasing"):
+        mid.compact()
+    assert _diff(snap, _snapshot(mid)) == []
+
+
+def test_compact_churn_is_bit_stable(base):
+    """Vectorized compact across insert/delete churn cycles: every cycle's
+    fold is a search no-op (scores bitwise, ids per tie level)."""
+    pts, q, idx = base
+    mid = MutableJunoIndex(idx, side_capacity=16)
+    rng = np.random.default_rng(12)
+    c = int(np.argmin([mid.free_slots(cc) for cc in range(16)]))
+    cent = np.asarray(idx.ivf.centroids[c])
+    inserted: list[int] = []
+    for cycle in range(4):
+        newpts = (cent[None] + 0.02 * rng.standard_normal(
+            (mid.free_slots(c) + 2, cent.shape[0]))).astype(np.float32)
+        inserted += mid.insert(newpts)
+        row_ids = np.asarray(mid.data.ivf.point_ids[c])
+        row_valid = np.asarray(mid.data.ivf.valid[c])
+        victims = [int(p) for p in row_ids[row_valid]][:3]
+        mid.delete(victims)
+        inserted = [p for p in inserted if p not in set(victims)]
+        qq = q[:12]
+        s0, i0 = mid.search(qq, nprobe=8, k=20, mode="H")
+        assert mid.compact() >= 2, cycle
+        s1, i1 = mid.search(qq, nprobe=8, k=20, mode="H")
+        _assert_search_equiv(s0, i0, s1, i1)
+        _check_bookkeeping(mid, f"cycle={cycle}")
+
+
+# ---------------------------------------------------------------------------
+# paged tier: artifact-backed minors (satellite 4)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def paged_tiered(tmp_path):
+    from repro.serve.paged import PagedAnnServeEngine, PagedIndexData
+
+    pts, q = make_dataset(DEEP_LIKE, 2000, 8, key=jax.random.PRNGKey(23))
+    pts, q = np.asarray(pts), np.asarray(q)
+    cfg = JunoConfig(n_clusters=16, n_entries=16, calib_queries=12,
+                     kmeans_iters=4, capacity_mult=1.1)
+    idx = build(pts, cfg)
+    store = ArtifactStore(str(tmp_path / "store"))
+    assert store.put("main", idx, cfg) == 1
+    paged = PagedIndexData(store.path("main", 1), cache_bytes=1 << 22)
+    eng = PagedAnnServeEngine(paged, metric=cfg.metric, side_capacity=4,
+                              minor_store=store, max_minors=2)
+    rng = np.random.default_rng(13)
+    newpts = (pts[:6].mean(0)[None] + 0.02 * rng.standard_normal(
+        (6, pts.shape[1]))).astype(np.float32)
+    ids = eng.insert(newpts[:4])       # read-only shards: all 4 fill L0
+    ids += eng.insert(newpts[4:])      # full L0 commits a minor artifact
+    assert len(eng.index._minors) == 1
+    return eng, store, newpts, ids
+
+
+def test_paged_minor_promotion_commits_artifact(paged_tiered):
+    """On the paged tier a promoted L0 is committed through the
+    ArtifactStore (codes dropped from memory) and demand-paged back on
+    first search touch — inserted ids stay retrievable."""
+    eng, store, newpts, ids = paged_tiered
+    minor = eng.index._minors[0]
+    assert minor.path is not None and minor.codes is None
+    assert store.latest("minors") == 1
+
+    req = eng.submit(newpts, k=10, mode="H", nprobe=16)
+    eng.run()                          # faults the minor's codes in
+    assert minor.codes is not None
+    got = np.asarray(req.ids)
+    assert all(pid in got[j] for j, pid in enumerate(ids))
+
+    # a second promotion commits the next version
+    rng = np.random.default_rng(14)
+    more = (newpts[:1] + 0.02 * rng.standard_normal(
+        (4, newpts.shape[1]))).astype(np.float32)
+    eng.insert(more)
+    assert len(eng.index._minors) == 2
+    assert store.latest("minors") == 2
+
+
+def test_paged_minor_corruption_fails_closed(paged_tiered):
+    """A corrupted on-disk minor generation must raise ArtifactError on
+    its first search touch — never serve garbage candidates."""
+    import os
+
+    eng, store, newpts, _ = paged_tiered
+    minor = eng.index._minors[0]
+    assert minor.codes is None         # not faulted in yet
+    apath = os.path.join(minor.path, "minor.npz")
+    with np.load(apath) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["codes"][0, 0] ^= 1
+    np.savez(apath, **arrays)
+
+    eng.submit(newpts, k=10, mode="H", nprobe=16)
+    with pytest.raises(ArtifactError, match="minor code row"):
+        eng.run()
