@@ -340,6 +340,91 @@ def run_rt_prefilter(n_requests: int = 96) -> dict:
     return {"dataset": "tti", "speedup": speedup, **out}
 
 
+def run_fused3(n_requests: int = 96) -> dict:
+    """Single-residency three-stage serving vs its composition baselines.
+
+    Replays the rt-prefilter H2 trace (same "tti" workload — the geometry
+    the sphere test prunes) through four engines:
+
+    * ``fused3``   — ``fused=True, prefilter="rt"``: the three-stage
+      RT→hit-count→ADC kernel path, probe-budget shrinking intact.
+    * ``composed`` — same engine with ``fused3=False``: the rt mask
+      applied OUTSIDE the fused scan (the exact path fused3 replaces).
+    * ``fused``    — fused two-stage only, dense probe scan.
+    * ``rt``       — rt prefilter only, composed (unfused) two-stage.
+
+    Gates: (1) the three-stage engine's ids AND scores are bit-equal to
+    the composed engine's on the full query batch — folding the sphere
+    walk into the kernel is a scheduling change, never a semantics
+    change; (2) three-stage H2 QPS >= max(fused-only, rt-only) — the
+    single residency must compound both prior speedups, not trade one
+    for the other. Timing is the median of 3 interleaved replay passes.
+    """
+    pts, queries, index, gt, cfg = common.get_bench_index("tti")
+    queries = np.asarray(queries)
+    gt10 = np.asarray(gt)[:, :10]
+    trace, pos = [], 0
+    for r in range(n_requests):
+        nq, k, target = RT_MIX[r % len(RT_MIX)]
+        rows = np.take(queries, range(pos, pos + nq), axis=0, mode="wrap")
+        trace.append((rows, k, target))
+        pos += nq
+    total_q = sum(t[0].shape[0] for t in trace)
+
+    variants = [
+        ("fused3", dict(fused=True, prefilter="rt")),
+        ("composed", dict(fused=True, prefilter="rt", fused3=False)),
+        ("fused", dict(fused=True)),
+        ("rt", dict(prefilter="rt")),
+    ]
+    engines, times = {}, {}
+    for name, kw in variants:
+        eng = AnnServeEngine(index, metric=cfg.metric,
+                             batch_buckets=(8, 16, 32), **kw)
+        for _ in range(2):   # warm every signature+bucket the trace hits
+            for (q, k, t) in trace:
+                eng.submit(q, k=k, recall_target=t)
+            eng.run()
+        engines[name], times[name] = eng, []
+    # interleaved timed passes (box-load drift; see run_rt_prefilter)
+    for _ in range(3):
+        for name, eng in engines.items():
+            t0 = time.perf_counter()
+            for (q, k, t) in trace:
+                eng.submit(q, k=k, recall_target=t)
+            eng.run()
+            times[name].append(time.perf_counter() - t0)
+
+    out = {}
+    reqs = {}
+    for name, eng in engines.items():
+        qps = total_q / sorted(times[name])[1]
+        req = eng.submit(queries, k=10, mode="H2")
+        eng.run()
+        reqs[name] = req
+        hits = (req.ids[:, :, None] == gt10[:, None, :]).any(-1)
+        out[name] = {"qps": qps, "recall10": float(hits.mean())}
+    ids_equal = bool(np.array_equal(reqs["fused3"].ids,
+                                    reqs["composed"].ids))
+    scores_equal = bool(np.array_equal(reqs["fused3"].scores,
+                                       reqs["composed"].scores))
+    baseline = max(out["fused"]["qps"], out["rt"]["qps"])
+    qps_ok = out["fused3"]["qps"] >= baseline
+    gate_ok = ids_equal and scores_equal and qps_ok
+    common.emit("serve_qps.fused3_h2_tier", 0.0,
+                f"fused3_qps={out['fused3']['qps']:.0f};"
+                f"composed_qps={out['composed']['qps']:.0f};"
+                f"fused_qps={out['fused']['qps']:.0f};"
+                f"rt_qps={out['rt']['qps']:.0f};"
+                f"speedup_vs_best={out['fused3']['qps'] / baseline:.2f}x;"
+                f"ids_equal={ids_equal};scores_equal={scores_equal};"
+                f"gate={'OK' if gate_ok else 'FAIL'}")
+    return {"dataset": "tti", "ids_equal": ids_equal,
+            "scores_equal": scores_equal,
+            "speedup_vs_best": out["fused3"]["qps"] / baseline,
+            "gate_ok": gate_ok, **out}
+
+
 def run_paged(n_requests: int = 96, exact_rerank: int = 40) -> dict:
     """Paged (out-of-core) vs resident serving of the mixed-tier trace.
 
@@ -796,6 +881,9 @@ def main() -> int:
                     help="write fused-vs-unfused + engine QPS numbers here")
     ap.add_argument("--json-rt", default=None, metavar="PATH",
                     help="write rt-prefilter vs dense-scan numbers here")
+    ap.add_argument("--json-fused3", default=None, metavar="PATH",
+                    help="write three-stage vs composition-baseline "
+                         "numbers here")
     ap.add_argument("--json-fleet", default=None, metavar="PATH",
                     help="write fleet tail-latency numbers here")
     ap.add_argument("--json-paged", default=None, metavar="PATH",
@@ -821,6 +909,14 @@ def main() -> int:
     print(f"# H2 tier rt-prefilter {rt_res['rt']['qps']:.0f} QPS vs "
           f"dense-scan {rt_res['scan']['qps']:.0f} QPS -> "
           f"{'OK' if rt_ok else 'REGRESSION'}", file=sys.stderr)
+    fused3_res = run_fused3()
+    fused3_ok = fused3_res["gate_ok"]
+    print(f"# H2 tier three-stage {fused3_res['fused3']['qps']:.0f} QPS vs "
+          f"max(fused {fused3_res['fused']['qps']:.0f}, "
+          f"rt {fused3_res['rt']['qps']:.0f}) QPS, "
+          f"ids_equal={fused3_res['ids_equal']}, "
+          f"scores_equal={fused3_res['scores_equal']} -> "
+          f"{'OK' if fused3_ok else 'REGRESSION'}", file=sys.stderr)
     fleet_res = run_fleet()
     fleet_ok = fleet_res["gate_ok"]
     for prof, pres in fleet_res["profiles"].items():
@@ -857,6 +953,11 @@ def main() -> int:
                        "dataset": "deep", **paged_res},
                       fh, indent=2, sort_keys=True)
             fh.write("\n")
+    if args.json_fused3:
+        with open(args.json_fused3, "w") as fh:
+            json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
+                       "h2_tier": fused3_res}, fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if args.json_fleet:
         with open(args.json_fleet, "w") as fh:
             json.dump({"smoke": args.smoke, "backend": "cpu-hostpath",
@@ -877,8 +978,8 @@ def main() -> int:
                        **res["fused"]}, fh, indent=2, sort_keys=True)
             fh.write("\n")
     if (args.check or args.smoke) and not (ok and fused_ok and rt_ok
-                                           and fleet_ok and paged_ok
-                                           and fresh_ok):
+                                           and fused3_ok and fleet_ok
+                                           and paged_ok and fresh_ok):
         return 1
     return 0
 

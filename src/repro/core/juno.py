@@ -397,6 +397,7 @@ def _score_probed_two_stage(index: JunoIndexData, q: jnp.ndarray,
                             ids: jnp.ndarray, *, k: int, metric: str,
                             thres_scale: float, rerank: int = 0,
                             impl: str = "ref", fused: bool = False,
+                            fused3: bool | None = None,
                             side: SideBuffer | None = None,
                             prefilter: str = "scan", rt_grid=None,
                             rt_scale: float = 1.0, rt_offset=None):
@@ -414,6 +415,15 @@ def _score_probed_two_stage(index: JunoIndexData, q: jnp.ndarray,
     same top-C-by-count rule, so fused and composed return identical ids
     (tests/test_impl_parity.py). Orthogonal to ``impl``, which picks who
     builds the LUT/hit tables.
+
+    When ``fused=True`` meets ``prefilter="rt"``, the RT sphere test ALSO
+    folds in — ``kernels.ops.fused_three_stage_scan`` runs the sphere
+    walk, the hit-count prefilter and the masked ADC in one residency, and
+    its ``probe_ok`` output replaces the separate :func:`_rt_probe_mask`
+    round trip (bit-identical by construction; the kernel gathers the same
+    ``slot_of`` verdicts in-register). ``fused3=False`` forces the
+    composed rt+fused path (parity baseline); ``None``/``True`` take the
+    three-stage kernel whenever it applies.
 
     Like :func:`_score_probed`, this is the post-gather tail of
     :func:`_search_batch_two_stage`: ``base``/``cids``/``codes``/``valid``/
@@ -435,7 +445,8 @@ def _score_probed_two_stage(index: JunoIndexData, q: jnp.ndarray,
         probe_base = base
     tau = density_lib.predict_threshold(index.density, qsub, thres_scale)
 
-    if prefilter == "rt":
+    use_fused3 = fused and prefilter == "rt" and fused3 is not False
+    if prefilter == "rt" and not use_fused3:
         probe_ok = _rt_probe_mask(rt_grid, q, tau, cids, rt_scale, rt_offset)
         valid = valid & probe_ok[..., None]
 
@@ -457,7 +468,27 @@ def _score_probed_two_stage(index: JunoIndexData, q: jnp.ndarray,
 
     p = codes.shape[2]
     cap = min(c_budget, nprobe * p)
-    if fused:
+    if use_fused3:
+        # all three stages in one residency: the kernel runs the sphere
+        # walk over the grid cells, masks the probes in-register (same
+        # slot_of verdicts _rt_probe_mask would gather, probe 0
+        # backstopped), then counts, thresholds and compacts as the fused
+        # two-stage scan does — no HBM hit table, no host mask round trip
+        from repro import rt as rt_lib
+        radius = rt_lib.query_radius(rt_grid, tau[:, 0, :], rt_scale)
+        qp2 = q @ rt_grid.proj                                   # (Q, 2)
+        gcids = cids if rt_offset is None else cids + rt_offset
+        slot_idx = jnp.take(rt_grid.slot_of, gcids)              # (Q, np)
+        _, _, cand, exact, probe_ok = kops.fused_three_stage_scan(
+            mlut, table, codes, valid, qp2[:, 0], qp2[:, 1], radius,
+            rt_grid.boxes, rt_grid.cell_reach, rt_grid.cell_c0,
+            rt_grid.cell_c1, rt_grid.slot_reach, slot_idx,
+            cap_c=cap, metric=metric)
+        valid = valid & probe_ok[..., None]
+        cand_probe = cand // p                                   # (Q, C)
+        cand_valid = jnp.take_along_axis(valid.reshape(nq, -1), cand, axis=1)
+        cand_ids = jnp.take_along_axis(ids.reshape(nq, -1), cand, axis=1)
+    elif fused:
         # both stages in one fused scan: counts, in-kernel survivor
         # threshold, compacted top-C candidates + their ADC totals
         _, _, cand, exact = kops.fused_two_stage_scan(
@@ -517,11 +548,13 @@ def _score_probed_two_stage(index: JunoIndexData, q: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric", "impl",
-                                             "rerank", "fused", "prefilter"))
+                                             "rerank", "fused", "fused3",
+                                             "prefilter"))
 def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
                             nprobe: int, k: int, metric: str,
                             thres_scale: float, rerank: int = 0,
                             impl: str = "ref", fused: bool = False,
+                            fused3: bool | None = None,
                             side: SideBuffer | None = None,
                             prefilter: str = "scan", rt_grid=None,
                             rt_scale: float = 1.0, rt_offset=None):
@@ -538,14 +571,14 @@ def _search_batch_two_stage(index: JunoIndexData, queries: jnp.ndarray, *,
     return _score_probed_two_stage(
         index, q, base, cids, codes, valid, ids, k=k, metric=metric,
         thres_scale=thres_scale, rerank=rerank, impl=impl, fused=fused,
-        side=side, prefilter=prefilter, rt_grid=rt_grid, rt_scale=rt_scale,
-        rt_offset=rt_offset)
+        fused3=fused3, side=side, prefilter=prefilter, rt_grid=rt_grid,
+        rt_scale=rt_scale, rt_offset=rt_offset)
 
 
 def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
            k: int = 100, mode: str = "H", metric: str = "l2",
            thres_scale: float = 1.0, batch: int = 64, impl: str = "ref",
-           rerank: int = 0, fused: bool = False,
+           rerank: int = 0, fused: bool = False, fused3: bool | None = None,
            side: SideBuffer | None = None, prefilter: str = "scan",
            rt_grid=None, rt_scale: float = 1.0):
     """Search the index — the public online API (paper Alg. 2).
@@ -582,7 +615,16 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
     fused : bool
         Mode "H2" only: serve both stages through the fused
         hit-count→masked-ADC kernel path; top-k ids are identical to the
-        composed path (see ``_search_batch_two_stage``).
+        composed path (see ``_search_batch_two_stage``). Combined with
+        ``prefilter="rt"`` this dispatches the single-residency
+        three-stage kernel (RT walk folded in as stage 0) unless
+        ``fused3=False``.
+    fused3 : bool, optional
+        Three-stage dispatch override. ``None`` (default) auto-selects it
+        whenever ``fused=True`` and ``prefilter="rt"``; ``False`` forces
+        the composed rt-mask + two-stage path (bit-identical results —
+        this is the parity baseline); ``True`` additionally validates
+        that the combination actually applies.
     side : SideBuffer, optional
         Overflow buffer of online inserts, merged into the final top-k
         with in-cluster-identical scoring.
@@ -612,6 +654,10 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
         raise ValueError(f"unknown prefilter {prefilter!r}")
     if prefilter == "rt" and rt_grid is None:
         raise ValueError("prefilter='rt' requires rt_grid (rt.build_grid)")
+    if fused3 and not (fused and prefilter == "rt"):
+        raise ValueError("fused3=True requires fused=True and "
+                         "prefilter='rt' (the three-stage kernel folds the "
+                         "RT walk into the fused scan)")
     rt_kw = dict(prefilter=prefilter, rt_grid=rt_grid, rt_scale=rt_scale)
     nq = queries.shape[0]
     out_s, out_i = [], []
@@ -628,7 +674,7 @@ def search(index: JunoIndexData, queries: jnp.ndarray, *, nprobe: int = 16,
             s, ids = _search_batch_two_stage(
                 index, qb, nprobe=nprobe, k=k, metric=metric,
                 thres_scale=thres_scale, rerank=rerank, impl=impl,
-                fused=fused, side=side, **rt_kw)
+                fused=fused, fused3=fused3, side=side, **rt_kw)
         else:
             s, ids = _search_batch(index, qb, nprobe=nprobe, k=k, mode=mode,
                                    metric=metric, thres_scale=thres_scale,

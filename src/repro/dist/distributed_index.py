@@ -91,6 +91,7 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
                             mode: str = "H", metric: str = "l2",
                             thres_scale: float = 1.0, impl: str = "ref",
                             rerank: int = 0, fused: bool = False,
+                            fused3: bool | None = None,
                             with_side: bool = False,
                             prefilter: str = "scan", rt_scale: float = 1.0):
     """Build ``dsearch(sharded_index, queries[, side][, rt_grid])``.
@@ -102,7 +103,11 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
     ``fused=True`` (mode "H2" only) runs each shard's two-stage scan
     through the fused hit-count→masked-ADC kernel path — per-shard results,
     and therefore the exact global merge, are id-identical to the composed
-    path (core/juno.py).
+    path (core/juno.py). Combined with ``prefilter="rt"`` each shard
+    serves the single-residency three-stage kernel (the shard's probes
+    look up the replicated grid at ``local_cid + shard_offset`` inside
+    the kernel, same offset rule as the composed path); ``fused3=False``
+    forces the composed rt+fused baseline, bit-identically.
 
     With ``with_side=True`` the callable takes a replicated
     :class:`SideBuffer` of online-insert overflow as a third argument: each
@@ -151,7 +156,7 @@ def make_distributed_search(mesh: Mesh, local_nprobe: int, k: int, *,
             s, ids = _search_batch_two_stage(
                 idx, queries, nprobe=local_nprobe, k=k, metric=metric,
                 thres_scale=thres_scale, rerank=rerank, impl=impl,
-                fused=fused, side=side, **rt_kw)
+                fused=fused, fused3=fused3, side=side, **rt_kw)
         else:
             s, ids = _search_batch(
                 idx, queries, nprobe=local_nprobe, k=k, mode=mode,

@@ -72,11 +72,37 @@ _PAD = -(2 ** 30) - 1
 # genuine sentinel-count point
 _INIT = -(2 ** 31)
 
+# hit-count accumulation dtypes the autotuner may pick (kernels.autotune).
+# Every option is EXACT for hit counts (|count| <= S <= 48 << 2^8): "f32"
+# is the historical default, "bf16" halves the one-hot operand bytes (8
+# mantissa bits hold integers to 256), "int8" keeps the table in int8 and
+# accumulates on the integer pipeline (int32) — so the knob is
+# result-invariant by construction (tests/test_autotune.py pins this).
+ACC_DTYPES = ("f32", "bf16", "int8")
+
+
+def count_dot(codes, table_i8, *, n_entries, acc="f32", slab=SLAB):
+    """Stage-1 hit-count contraction with a tunable accumulation dtype.
+
+    codes (..., bP, S) int32, table_i8 (..., S, E) int8 → (..., bP) int32.
+    ``acc`` selects the MXU operand/accumulation dtype (see ACC_DTYPES);
+    all options produce bit-identical int32 counts.
+    """
+    if acc == "bf16":
+        tab, od = table_i8.astype(jnp.bfloat16), jnp.bfloat16
+    elif acc == "int8":
+        tab, od = table_i8, jnp.int32
+    else:
+        tab, od = table_i8.astype(jnp.float32), jnp.float32
+    out = slab_onehot_dot(codes, tab, n_entries=n_entries, out_dtype=od,
+                          slab=slab)
+    return out.astype(jnp.int32)
+
 
 def _fused_kernel(lut_ref, table_ref, codes_ref, valid_ref,
                   counts_ref, dist_ref, cand_ref, cdist_ref,
                   topv_ref, topi_ref, *, n_entries, cap_c, bp, p_real,
-                  p_pad, bad_value):
+                  p_pad, bad_value, acc):
     t = pl.program_id(1)           # 0 = hit-count pass, 1 = masked-ADC pass
     j = pl.program_id(2)           # flat point-block index over np·Ppad
     codes = codes_ref[...].astype(jnp.int32)          # (bQ, bP, S)
@@ -84,17 +110,16 @@ def _fused_kernel(lut_ref, table_ref, codes_ref, valid_ref,
     bq = codes.shape[0]
 
     # stage 1 (both phases — phase 1 re-derives the survivor mask from it):
-    # batched SLAB one-hot contraction; f32 accumulation of {-1,0,1} terms
-    # is exact (|count| <= S << 2^24), so counts are bit-identical to the
-    # int32-path hit_count kernel.
-    table = table_ref[...][:, 0].astype(jnp.float32)  # (bQ, S, E)
-    cnt = slab_onehot_dot(codes, table, n_entries=n_entries,
-                          out_dtype=jnp.float32, slab=SLAB)
+    # batched SLAB one-hot contraction; accumulation of {-1,0,1} terms is
+    # exact in every ACC_DTYPES option (|count| <= S << 2^8), so counts are
+    # bit-identical to the int32-path hit_count kernel regardless of ``acc``.
+    cnt = count_dot(codes, table_ref[...][:, 0], n_entries=n_entries,
+                    acc=acc)
     bad_count = _NEG
     if p_pad != p_real:            # point axis padded: mark pad slots so
         lane = j * bp + jax.lax.broadcasted_iota(jnp.int32, (bq, bp), 1)
         bad_count = jnp.where(lane % p_pad < p_real, _NEG, _PAD)
-    counts = jnp.where(valid, cnt.astype(jnp.int32), bad_count)
+    counts = jnp.where(valid, cnt, bad_count)
     counts_ref[...] = counts
 
     @pl.when(t == 0)
@@ -152,16 +177,18 @@ def _largest_divisor(n: int, cap: int) -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cap_c", "metric", "bq", "bp",
+                   static_argnames=("cap_c", "metric", "bq", "bp", "acc",
                                     "interpret"))
 def fused_two_stage(lut: jnp.ndarray, table: jnp.ndarray, codes: jnp.ndarray,
                     valid: jnp.ndarray, *, cap_c: int, metric: str = "l2",
                     bq: int = DEFAULT_BQ, bp: int | None = None,
-                    interpret: bool = False):
+                    acc: str = "f32", interpret: bool = False):
     """lut (Q, np, S, E) f32, table (Q, np, S, E) int8,
     codes (Q, np, P, S) uint8, valid (Q, np, P) bool →
     (counts (Q, np, P) i32, dist (Q, np, P) f32,
-     cand (Q, C) i32, cand_dist (Q, C) f32). See module docstring."""
+     cand (Q, C) i32, cand_dist (Q, C) f32). See module docstring.
+    ``bq``/``bp``/``acc`` are the autotuner's tile/accumulation knobs
+    (``kernels.autotune``) — all result-invariant."""
     q, n_probe, p, s = codes.shape
     e = lut.shape[-1]
     cap_c = max(1, min(cap_c, n_probe * p))
@@ -193,7 +220,7 @@ def fused_two_stage(lut: jnp.ndarray, table: jnp.ndarray, codes: jnp.ndarray,
 
     counts, dist, cand, cdist = pl.pallas_call(
         functools.partial(_fused_kernel, n_entries=e, cap_c=cap_c, bp=bp,
-                          p_real=p, p_pad=p_pad, bad_value=bad),
+                          p_real=p, p_pad=p_pad, bad_value=bad, acc=acc),
         grid=(qp // bq, 2, n_probe * npb),
         in_specs=[
             pl.BlockSpec((bq, 1, s, e), lambda i, t, j: (i, j // npb, 0, 0)),
@@ -228,10 +255,11 @@ def fused_two_stage(lut: jnp.ndarray, table: jnp.ndarray, codes: jnp.ndarray,
     return counts, dist, cand, cdist
 
 
-@functools.partial(jax.jit, static_argnames=("cap_c", "metric"))
+@functools.partial(jax.jit, static_argnames=("cap_c", "metric", "topc_impl"))
 def fused_two_stage_host(lut: jnp.ndarray, table: jnp.ndarray,
                          codes: jnp.ndarray, valid: jnp.ndarray, *,
-                         cap_c: int, metric: str = "l2"):
+                         cap_c: int, metric: str = "l2",
+                         topc_impl: str = "sort"):
     """Schedule-equivalent host path for off-TPU serving. Same contract as
     the kernel with two documented deviations, both invisible to the
     two-stage search (which consumes only ``cand``/``cand_dist``/``counts``):
@@ -250,6 +278,13 @@ def fused_two_stage_host(lut: jnp.ndarray, table: jnp.ndarray,
     dominates the composed two-stage path there — this is the host-side
     payoff of the kernel's "threshold in-kernel, compact per block" design.
     Stage 2 then gathers the masked LUT for exactly the C survivors.
+
+    ``topc_impl`` is the autotuner's θ-selection knob (``kernels.autotune``):
+    "sort" (default) derives θ_q from a values-only sort + searchsorted;
+    "topk" derives the same θ_q from ``lax.top_k`` values and a count of
+    strictly-greater entries. Both feed the identical tie-rank/compaction
+    tail, so candidate sets, order and every output are bit-identical —
+    only the selection cost differs by backend and problem width.
     """
     q, n_probe, p, s = codes.shape
     w = n_probe * p
@@ -267,11 +302,15 @@ def fused_two_stage_host(lut: jnp.ndarray, table: jnp.ndarray,
                        _NEG)
     flat = counts.reshape(q, w)
 
-    # ---- survivor threshold: exact θ-selection, no key-value sort -------
-    srt = jnp.sort(flat, axis=1)                         # values only
-    theta = srt[:, w - cap_c]                # C-th largest count (with ties)
-    n_gt = w - jax.vmap(
-        lambda sr, th: jnp.searchsorted(sr, th, side="right"))(srt, theta)
+    # ---- survivor threshold: exact θ-selection ---------------------------
+    if topc_impl == "topk":
+        theta = jax.lax.top_k(flat, cap_c)[0][:, -1]     # C-th largest count
+        n_gt = jnp.sum((flat > theta[:, None]).astype(jnp.int32), axis=1)
+    else:                                                # values-only sort
+        srt = jnp.sort(flat, axis=1)
+        theta = srt[:, w - cap_c]            # C-th largest count (with ties)
+        n_gt = w - jax.vmap(
+            lambda sr, th: jnp.searchsorted(sr, th, side="right"))(srt, theta)
     tie = flat == theta[:, None]
     tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=1) - 1
     take = (flat > theta[:, None]) | (

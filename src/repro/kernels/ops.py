@@ -58,6 +58,7 @@ def slab_onehot_dot(codes: jnp.ndarray, tab: jnp.ndarray, *, n_entries: int,
 # modules import it from here at module load, so it must already be bound
 # when a kernel module (imported by this block) re-enters the partially
 # initialised ``ops``.
+from . import fused_three_stage as _fused3  # noqa: E402
 from . import fused_two_stage as _fused  # noqa: E402
 from . import hit_count as _hit  # noqa: E402
 from . import ivf_filter as _filt  # noqa: E402
@@ -162,12 +163,63 @@ def fused_two_stage_scan(mlut: jnp.ndarray, table: jnp.ndarray,
     the host path's histogram selection is the same survivor-threshold
     idea expressed CPU-natively. The interpret-mode kernel is validated
     against the composed kernels by tests/test_fused_kernel.py.
+
+    The result-invariant tile/θ-selection knobs come from the process
+    active :class:`repro.kernels.autotune.KernelConfig` (read at trace
+    time — install tuned configs before the first dispatch).
     """
+    from . import autotune
+    cfg = autotune.active_config("fused_two_stage")
     if _on_tpu():
         return _fused.fused_two_stage(mlut, table, codes, valid,
-                                      cap_c=cap_c, metric=metric)
+                                      cap_c=cap_c, metric=metric,
+                                      bq=cfg.bq, bp=cfg.bp,
+                                      acc=cfg.acc_dtype)
     return _fused.fused_two_stage_host(mlut, table, codes, valid,
-                                       cap_c=cap_c, metric=metric)
+                                       cap_c=cap_c, metric=metric,
+                                       topc_impl=cfg.topc_impl)
+
+
+def fused_three_stage_scan(mlut: jnp.ndarray, table: jnp.ndarray,
+                           codes: jnp.ndarray, valid: jnp.ndarray,
+                           q0: jnp.ndarray, q1: jnp.ndarray,
+                           radius: jnp.ndarray, boxes: jnp.ndarray,
+                           cell_reach: jnp.ndarray, cell_c0: jnp.ndarray,
+                           cell_c1: jnp.ndarray, slot_reach: jnp.ndarray,
+                           slot_idx: jnp.ndarray, *, cap_c: int,
+                           metric: str = "l2"):
+    """Single-residency three-stage scan: RT sphere test → hit-count
+    prefilter → masked ADC + top-candidate compaction, in one pass.
+
+    The :func:`fused_two_stage_scan` contract with the RT probe filter
+    folded in as stage 0: ``q0``/``q1``/``radius`` are the ray-plane
+    queries, ``boxes``/``cell_reach``/``cell_c0``/``cell_c1``/
+    ``slot_reach`` the ``CentroidGrid`` layout, and ``slot_idx`` (Q, np)
+    int32 the probed clusters' flat slot indices
+    (``grid.slot_of[cids]``). Returns the two-stage 4-tuple plus
+    ``probe_ok`` (Q, np) bool — identical to the host-side
+    ``_rt_probe_mask`` gather (probe 0 always True), so downstream
+    side-buffer scoring applies the same verdict the kernel applied to
+    in-cluster points.
+
+    Dispatch/knob rules are those of :func:`fused_two_stage_scan`: the
+    Pallas kernel on TPU, the schedule-equivalent host path off-TPU, with
+    the active ``autotune`` config (``fused_three_stage`` entry) applied
+    at trace time. Bit-identical to composing :func:`rt_sphere_hits` →
+    probe-mask gather → :func:`fused_two_stage_scan`
+    (tests/test_fused3_kernel.py).
+    """
+    from . import autotune
+    cfg = autotune.active_config("fused_three_stage")
+    if _on_tpu():
+        return _fused3.fused_three_stage(
+            mlut, table, codes, valid, q0, q1, radius, boxes, cell_reach,
+            cell_c0, cell_c1, slot_reach, slot_idx, cap_c=cap_c,
+            metric=metric, bq=cfg.bq, bp=cfg.bp, acc=cfg.acc_dtype)
+    return _fused3.fused_three_stage_host(
+        mlut, table, codes, valid, q0, q1, radius, cell_c0, cell_c1,
+        slot_reach, slot_idx, cap_c=cap_c, metric=metric,
+        topc_impl=cfg.topc_impl)
 
 
 def rt_sphere_hits(q0: jnp.ndarray, q1: jnp.ndarray, radius: jnp.ndarray,

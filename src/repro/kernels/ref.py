@@ -80,6 +80,27 @@ def fused_two_stage_ref(lut, table, codes, valid, *, cap_c, metric="l2"):
     return counts, dist, cand, cand_dist
 
 
+def fused_three_stage_ref(lut, table, codes, valid, q0, q1, radius,
+                          cell_c0, cell_c1, slot_reach, slot_idx, *,
+                          cap_c, metric="l2"):
+    """Dense oracle for the three-stage RT→hit-count→ADC kernel.
+
+    The two-stage oracle with phase 0 composed in front: the dense sphere
+    test (``rt_sphere_hits_ref``) gathered at ``slot_idx`` (Q, np) —
+    ``CentroidGrid.slot_of`` at the probed cluster ids — yields
+    ``probe_ok``; probe 0 is forced True (the `_rt_probe_mask` backstop:
+    the nearest probe is always scanned); ``valid`` is masked by it before
+    ``fused_two_stage_ref``. Returns that oracle's 4-tuple + probe_ok.
+    """
+    hits = rt_sphere_hits_ref(q0, q1, radius, cell_c0, cell_c1, slot_reach)
+    probe_ok = jnp.take_along_axis(hits, slot_idx, axis=1) > 0
+    probe_ok = probe_ok.at[:, 0].set(True)
+    valid = valid & probe_ok[:, :, None]
+    counts, dist, cand, cand_dist = fused_two_stage_ref(
+        lut, table, codes, valid, cap_c=cap_c, metric=metric)
+    return counts, dist, cand, cand_dist, probe_ok
+
+
 def rt_sphere_hits_ref(q0, q1, radius, c0, c1, slot_reach):
     """Dense oracle for the RT sphere-intersection kernel.
 

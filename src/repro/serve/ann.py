@@ -108,7 +108,8 @@ class AnnServeEngine:
                  metric: str = "l2", impl: str = "ref",
                  thres_scale: float = 1.0, side_capacity: int = 256,
                  batch_buckets: tuple[int, ...] | None = None,
-                 fused: bool = False, prefilter: str = "scan",
+                 fused: bool = False, fused3: bool | None = None,
+                 prefilter: str = "scan",
                  rt_scale: float = 1.0, max_minors: int = 0,
                  merge_clusters_per_step: int = 32):
         """Wrap an index (mutable or not) in a serving engine.
@@ -132,6 +133,13 @@ class AnnServeEngine:
         fused : bool
             Serve the H and H2 recall tiers through the fused two-stage
             kernel path on ONE shared jit signature (see class notes).
+        fused3 : bool, optional
+            Three-stage dispatch override (``core.juno.search``): with
+            ``fused=True`` and ``prefilter="rt"`` the engine serves the
+            single-residency RT→hit-count→ADC kernel by default;
+            ``False`` forces the composed rt-mask + two-stage path
+            (bit-identical ids/scores — the parity baseline the
+            benchmarks gate against).
         prefilter : str
             "scan" | "rt". With "rt" every dispatched search masks
             non-intersecting probes via the sphere-intersection filter
@@ -188,6 +196,9 @@ class AnnServeEngine:
         #: tests/test_recall_matrix.py); H2-tier ids are unchanged only in
         #: the candidate-budget sense (C grows from 4k to 32k).
         self.fused = fused
+        #: three-stage override forwarded to every H2 dispatch (None =
+        #: auto: the three-stage kernel serves fused+rt requests)
+        self.fused3 = fused3
         # deployment-tunable: big buckets fill a TPU's batch dim; smaller
         # buckets suit CPU where per-query cost grows with batch size
         self.batch_buckets = tuple(batch_buckets or self.BATCH_BUCKETS)
@@ -385,7 +396,7 @@ class AnnServeEngine:
             return _search_batch_two_stage(
                 self.index.data, qb, nprobe=nprobe, k=k, metric=self.metric,
                 thres_scale=self.thres_scale, impl=self.impl,
-                fused=self.fused,
+                fused=self.fused, fused3=self.fused3,
                 rerank=self.FUSED_RERANK_MULT * k if self.fused else 0,
                 side=side, **rt_kw)
         return _search_batch(

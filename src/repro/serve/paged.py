@@ -307,10 +307,10 @@ def _paged_score(index, q, base, cids, codes, *, k, mode, metric,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "metric", "impl", "rerank",
-                                    "fused", "prefilter"))
+                                    "fused", "fused3", "prefilter"))
 def _paged_score_two_stage(index, q, base, cids, codes, *, k, metric,
                            thres_scale, rerank, impl, fused, side,
-                           prefilter, rt_grid, rt_scale):
+                           prefilter, rt_grid, rt_scale, fused3=None):
     """Mode-H2 stages over host-gathered codes (jitted); see
     :func:`_paged_score` for the gather contract."""
     valid = index.ivf.valid[cids]
@@ -318,7 +318,8 @@ def _paged_score_two_stage(index, q, base, cids, codes, *, k, metric,
     return _score_probed_two_stage(
         index, q, base, cids, codes, valid, ids, k=k, metric=metric,
         thres_scale=thres_scale, rerank=rerank, impl=impl, fused=fused,
-        side=side, prefilter=prefilter, rt_grid=rt_grid, rt_scale=rt_scale)
+        fused3=fused3, side=side, prefilter=prefilter, rt_grid=rt_grid,
+        rt_scale=rt_scale)
 
 
 class PagedJunoIndex(MutableIndexBase):
@@ -455,6 +456,7 @@ class PagedJunoIndex(MutableIndexBase):
                mode: str = "H", metric: str = "l2",
                thres_scale: float = 1.0, impl: str = "ref",
                rerank: int = 0, fused: bool = False,
+               fused3: bool | None = None,
                prefilter: str = "scan", rt_scale: float = 1.0):
         """One paged search batch: filter → cache gather → shared scoring.
 
@@ -470,8 +472,10 @@ class PagedJunoIndex(MutableIndexBase):
         ----------
         queries : array-like
             (Q, D) f32 query rows.
-        nprobe, k, mode, metric, thres_scale, impl, rerank, fused
-            As :func:`repro.core.juno.search`.
+        nprobe, k, mode, metric, thres_scale, impl, rerank, fused, fused3
+            As :func:`repro.core.juno.search` (``fused`` +
+            ``prefilter="rt"`` serves the three-stage kernel over the
+            paged codes unless ``fused3=False``).
         prefilter : str
             "scan" | "rt" — "rt" requires the artifact-stored grid.
         rt_scale : float
@@ -496,7 +500,7 @@ class PagedJunoIndex(MutableIndexBase):
             s, ids = _paged_score_two_stage(
                 self.data, q, base, cids, codes, k=k, metric=metric,
                 thres_scale=thres_scale, rerank=rerank, impl=impl,
-                fused=fused, side=side, prefilter=prefilter,
+                fused=fused, fused3=fused3, side=side, prefilter=prefilter,
                 rt_grid=rt_grid, rt_scale=rt_scale)
         else:
             s, ids = _paged_score(
@@ -587,8 +591,9 @@ class PagedAnnServeEngine(AnnServeEngine):
                 self.index.data, qb, base, cids, codes, k=kq,
                 metric=self.metric, thres_scale=self.thres_scale,
                 rerank=self.FUSED_RERANK_MULT * k if self.fused else 0,
-                impl=self.impl, fused=self.fused, side=side,
-                prefilter=prefilter, rt_grid=rt_grid, rt_scale=rt_scale)
+                impl=self.impl, fused=self.fused, fused3=self.fused3,
+                side=side, prefilter=prefilter, rt_grid=rt_grid,
+                rt_scale=rt_scale)
         else:
             s, ids = _paged_score(
                 self.index.data, qb, base, cids, codes, k=kq, mode=mode,

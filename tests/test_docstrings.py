@@ -17,6 +17,7 @@ import repro.core as core
 import repro.dist.distributed_index as dist_index
 import repro.rt as rt
 from repro.build.merge import fold_step, load_minor, save_minor
+from repro.kernels import autotune
 from repro.core.freshness import (MergeScheduler, MinorGeneration,
                                   combined_delta, promote_l0)
 from repro.core.juno import MutableIndexBase, MutableJunoIndex
@@ -50,8 +51,13 @@ PUBLIC = [
     AnnServeEngine.compact, AnnServeEngine.latency_stats,
     # kernel dispatchers
     ops.build_selective_lut, ops.masked_adc_scan, ops.hit_count_scan,
-    ops.fused_two_stage_scan, ops.rt_sphere_hits, ops.filter_scores,
+    ops.fused_two_stage_scan, ops.fused_three_stage_scan,
+    ops.rt_sphere_hits, ops.filter_scores,
     ops.slab_onehot_dot,
+    # autotune pass
+    autotune.KernelConfig, autotune.KernelConfig.validate, autotune.tune,
+    autotune.candidates, autotune.save_cache, autotune.load_cache,
+    autotune.ensure_tuned, autotune.set_config, autotune.active_config,
     # rt builders
     rt.CentroidGrid, rt.build_grid, rt.query_radius, rt.survivor_mask,
     rt.routing_state, rt.probe_budget, rt.update_radii, rt.save_grid,
@@ -116,6 +122,9 @@ def test_public_modules_have_docstrings():
     import repro.core.freshness
     import repro.core.juno
     import repro.dist.distributed_index
+    import repro.kernels.autotune
+    import repro.kernels.fused_three_stage
+    import repro.kernels.fused_two_stage
     import repro.kernels.ref
     import repro.rt.grid
     import repro.rt.intersect
@@ -126,7 +135,9 @@ def test_public_modules_have_docstrings():
                 repro.serve.ann,
                 repro.serve.fleet, repro.serve.paged, repro.rt.grid,
                 repro.rt.intersect,
-                repro.kernels.ref, repro.dist.distributed_index,
+                repro.kernels.ref, repro.kernels.fused_two_stage,
+                repro.kernels.fused_three_stage, repro.kernels.autotune,
+                repro.dist.distributed_index,
                 repro.build.pipeline, repro.build.store, repro.build.rebuild,
                 repro.build.merge]:
         assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__

@@ -187,6 +187,55 @@ def test_side_buffer_respects_rt_mask(rt_data):
         assert set(row1) == set(row2)
 
 
+def test_side_buffer_fused3_verdict_parity(rt_data):
+    """Regression pin for the single-residency three-stage kernel: a
+    side-buffer point must receive the SAME probe verdict as its
+    in-cluster siblings — the kernel's in-register ``probe_ok`` is the
+    one verdict both the cluster lanes and the side block consume, so
+    fused3 stays bit-equal (ids AND scores) to the composed rt+fused
+    path while a spill is live, and ``compact()`` stays a search no-op
+    under the new kernel. Before the shared-verdict wiring this failed:
+    a side point probed through a cell its cluster slot had pruned."""
+    pts, q, idx, grid, _ = rt_data["l2"]
+    q = jnp.asarray(q)[:16]
+    mi = MutableJunoIndex(idx, side_capacity=64, rt_grid=grid)
+    # force a spill: fill the fullest cluster's free slots + 1
+    c = int(np.argmin([mi.free_slots(cc)
+                       for cc in range(idx.ivf.point_ids.shape[0])]))
+    cent = np.asarray(idx.ivf.centroids[c])
+    spill = (cent[None] + 0.01 * np.random.default_rng(5).standard_normal(
+        (mi.free_slots(c) + 1, cent.shape[0]))).astype(np.float32)
+    mi.insert(spill)
+    assert mi.side_fill >= 1
+    # H2 tier raw and H-tier serving shape (fused + rerank), calibrated
+    # and cover-all radii: three-stage vs composed, bit-equal both planes
+    for rerank in [0, AnnServeEngine.FUSED_RERANK_MULT * 10]:
+        for scale in [0.85, FULL]:
+            s3, i3 = mi.search(q, nprobe=NPROBE, k=10, mode="H2",
+                               metric="l2", prefilter="rt", fused=True,
+                               rerank=rerank, rt_scale=scale,
+                               batch=q.shape[0])
+            s2, i2 = mi.search(q, nprobe=NPROBE, k=10, mode="H2",
+                               metric="l2", prefilter="rt", fused=True,
+                               fused3=False, rerank=rerank,
+                               rt_scale=scale, batch=q.shape[0])
+            np.testing.assert_array_equal(np.asarray(i3), np.asarray(i2))
+            np.testing.assert_allclose(np.asarray(s3), np.asarray(s2),
+                                       rtol=0, atol=0)
+    # compact() no-op under the three-stage kernel: free a slot in the
+    # owner cluster, search (side active), fold back in, search again
+    victim = int(idx.ivf.point_ids[c, 0])
+    mi.delete([victim])
+    s1, i1 = mi.search(q, nprobe=NPROBE, k=10, mode="H2", metric="l2",
+                       prefilter="rt", fused=True, batch=q.shape[0])
+    assert mi.compact() >= 1
+    s2, i2 = mi.search(q, nprobe=NPROBE, k=10, mode="H2", metric="l2",
+                       prefilter="rt", fused=True, batch=q.shape[0])
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=0, atol=0)
+    for row1, row2 in zip(np.asarray(i1), np.asarray(i2)):
+        assert set(row1) == set(row2)
+
+
 # ---------------------------------------------------------------------------
 # grid structure: ragged padding, serialization, insert maintenance
 # ---------------------------------------------------------------------------
