@@ -34,6 +34,7 @@ import hashlib
 import json
 import os
 import shutil
+import time
 import uuid
 import zipfile
 from typing import NamedTuple
@@ -409,16 +410,27 @@ class ArtifactStore:
     :meth:`latest`/:meth:`get` never observe a half-written generation.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, registry=None):
         """Open (creating if needed) the store rooted at ``root``.
 
         Parameters
         ----------
         root : str
             Store root directory.
+        registry : repro.obs.MetricsRegistry, optional
+            Destination for the ``juno_store_*`` series:
+            put/load/verify duration histograms plus operation
+            counters. None (default) disables instrumentation.
         """
         self.root = root
+        self.registry = registry
         os.makedirs(root, exist_ok=True)
+
+    def _observe(self, op: str, dt: float) -> None:
+        """Record one timed store operation when a registry is bound."""
+        if self.registry is not None:
+            self.registry.histogram("juno_store_op_seconds", op=op).add(dt)
+            self.registry.counter("juno_store_ops_total", op=op).inc()
 
     def path(self, name: str, version: int) -> str:
         """Directory of one generation of ``name``.
@@ -512,6 +524,7 @@ class ArtifactStore:
         ArtifactError
             When ``max_attempts`` generations were contended.
         """
+        t0 = time.perf_counter()
         d = os.path.join(self.root, name)
         os.makedirs(d, exist_ok=True)
         tmp = os.path.join(d, f".tmp-{os.getpid()}-{uuid.uuid4().hex[:8]}")
@@ -529,6 +542,7 @@ class ArtifactStore:
                         raise
                     continue  # lost the race for this generation number
                 _fsync_dir(d)
+                self._observe("put", time.perf_counter() - t0)
                 return version
             raise ArtifactError(
                 f"could not commit a generation of {name!r} after "
@@ -559,4 +573,40 @@ class ArtifactStore:
             if version is None:
                 raise ArtifactError(f"no artifact named {name!r} in "
                                     f"{self.root}")
-        return load_index(self.path(name, version), **kw)
+        t0 = time.perf_counter()
+        loaded = load_index(self.path(name, version), **kw)
+        self._observe("load", time.perf_counter() - t0)
+        return loaded
+
+    def verify(self, name: str, version: int | None = None) -> dict:
+        """Re-verify one committed generation against its manifest.
+
+        Runs :func:`verify_artifact` (schema, config hash, full array
+        digests) over the generation's directory, timing the pass into
+        the ``juno_store_op_seconds{op="verify"}`` histogram when a
+        registry is bound. Fail-closed: a corrupt artifact raises
+        ``ArtifactError`` — the timing is still recorded so slow or
+        failing scrubs show up in the metrics.
+
+        Parameters
+        ----------
+        name : str
+            Artifact name.
+        version : int, optional
+            Generation to verify (default :meth:`latest`).
+
+        Returns
+        -------
+        dict
+            The verified manifest (see :func:`verify_artifact`).
+        """
+        if version is None:
+            version = self.latest(name)
+            if version is None:
+                raise ArtifactError(f"no artifact named {name!r} in "
+                                    f"{self.root}")
+        t0 = time.perf_counter()
+        try:
+            return verify_artifact(self.path(name, version))
+        finally:
+            self._observe("verify", time.perf_counter() - t0)

@@ -37,6 +37,7 @@ lanes (``DistributedMutableIndex.merge_lanes``) round-robin.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -222,7 +223,7 @@ class MergeScheduler:
     """
 
     def __init__(self, index, *, clusters_per_step: int = 32,
-                 promote_fill: float = 1.0):
+                 promote_fill: float = 1.0, registry=None):
         """Attach a scheduler to a tier-enabled mutable index.
 
         Parameters
@@ -235,6 +236,11 @@ class MergeScheduler:
             L0 fill fraction that triggers promotion (1.0 = only when
             completely full; ``drain()`` also promotes partial L0s when
             nothing else makes progress).
+        registry : repro.obs.MetricsRegistry, optional
+            Destination for the ``juno_merge_*`` series: cycle-duration
+            histograms, folded/promotion counters and L0/minor occupancy
+            gauges, refreshed per step. None (default) keeps only the
+            local ``stats`` dict.
         """
         self.index = index
         self.clusters_per_step = int(clusters_per_step)
@@ -244,6 +250,7 @@ class MergeScheduler:
         self._lane_i = 0
         self.stats = {"steps": 0, "promotions": 0, "folded": 0,
                       "compacted": 0, "drains": 0}
+        self.registry = registry
 
     @property
     def pending(self) -> int:
@@ -274,6 +281,7 @@ class MergeScheduler:
         """One bounded merge step; returns points moved between tiers."""
         from repro.build.merge import fold_step
         idx = self.index
+        t0 = time.perf_counter()
         moved = idx.compact()            # L0 → free base slots (vectorized)
         self.stats["compacted"] += moved
         if (idx.side_fill >= self.promote_fill * idx.side.capacity
@@ -287,7 +295,22 @@ class MergeScheduler:
                            lane=lane)
         self.stats["folded"] += folded
         self.stats["steps"] += 1
+        if self.registry is not None:
+            self._observe(time.perf_counter() - t0, moved, folded)
         return moved + folded
+
+    def _observe(self, dt: float, moved: int, folded: int) -> None:
+        """Refresh the ``juno_merge_*`` registry series after one step."""
+        reg = self.registry
+        reg.histogram("juno_merge_step_seconds").add(dt)
+        reg.counter("juno_merge_steps_total").inc()
+        reg.counter("juno_merge_folded_total").inc(folded)
+        reg.counter("juno_merge_moved_total").inc(moved)
+        idx = self.index
+        cap = max(1, getattr(idx.side, "capacity", 1))
+        reg.gauge("juno_merge_l0_fill").set(idx.side_fill / cap)
+        reg.gauge("juno_merge_minors").set(len(getattr(idx, "_minors", ())))
+        reg.gauge("juno_merge_delta_rows").set(self.pending)
 
     def drain(self, max_rounds: int = 10_000) -> int:
         """Run merge steps to quiescence (the ``compact()`` entry point).
@@ -307,6 +330,7 @@ class MergeScheduler:
         int
             Total points moved between tiers.
         """
+        t0 = time.perf_counter()
         total = 0
         for _ in range(max_rounds):
             progress = sum(self.step() for _ in range(len(self._lanes)))
@@ -319,4 +343,8 @@ class MergeScheduler:
                 break
             total += progress
         self.stats["drains"] += 1
+        if self.registry is not None:
+            self.registry.histogram("juno_merge_drain_seconds").add(
+                time.perf_counter() - t0)
+            self.registry.counter("juno_merge_drains_total").inc()
         return total

@@ -1,0 +1,132 @@
+"""Online recall telemetry via a sampled exact-rerank shadow path.
+
+Offline recall gates (BENCH_*.json) measure quality against a frozen
+ground truth; a serving system needs the same signal *online*, per
+recall tier, so the future per-query strategy router (ROADMAP open
+item) has something to route on. :class:`RecallProbe` shadows roughly
+one in ``every`` served requests: it brute-force exact-scores the
+request's queries against the raw row matrix the probe was built with
+(numpy only — no jax, no index structures) and reports the fraction of
+the engine's returned ids that land in the exact top-k as a
+``juno_recall_online_at_k`` gauge per tier, alongside a sample
+counter. The shadow pass runs on the host after results are already
+returned, so it never sits on the serving path's critical section; its
+cost is bounded by the sampling rate.
+
+Snapshot caveat: the probe scores against the row matrix captured at
+construction. Ids appended after that snapshot (inserts) fall outside
+it and are counted as misses, biasing the estimate *down* — rebuild or
+re-bind the probe after heavy ingest. Deletes are handled by the engine
+never returning tombstoned ids.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .registry import MetricsRegistry
+
+
+def exact_topk_ids(queries: np.ndarray, vectors: np.ndarray, k: int,
+                   metric: str = "l2",
+                   v_sq: np.ndarray | None = None) -> np.ndarray:
+    """Brute-force exact top-``k`` row ids per query (numpy, host-side).
+
+    ``metric`` is ``"l2"`` (squared euclidean) or ``"ip"`` (maximum
+    inner product). Returns ``(Q, k)`` int64 ids, best first — the same
+    ordering contract as ``repro.core.exact_topk`` but dependency-free
+    so the obs package stays importable without jax. ``v_sq`` optionally
+    supplies precomputed per-row squared norms of ``vectors`` (an O(N*D)
+    term otherwise recomputed per call — callers scoring against a fixed
+    snapshot, like :class:`RecallProbe`, cache it once).
+    """
+    q = np.asarray(queries, dtype=np.float32)
+    v = np.asarray(vectors, dtype=np.float32)
+    if metric == "l2":
+        # ||q - v||^2 = q.q - 2 q.v + v.v ; q.q is rank-constant per row.
+        if v_sq is None:
+            v_sq = np.sum(v * v, axis=1)
+        d = -2.0 * (q @ v.T) + np.asarray(v_sq)[None, :]
+    elif metric == "ip":
+        d = -(q @ v.T)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    k = min(int(k), v.shape[0])
+    part = np.argpartition(d, k - 1, axis=1)[:, :k]
+    order = np.argsort(np.take_along_axis(d, part, axis=1), axis=1)
+    return np.take_along_axis(part, order, axis=1).astype(np.int64)
+
+
+class RecallProbe:
+    """Sampled online recall@k estimator feeding registry gauges.
+
+    Parameters
+    ----------
+    vectors : np.ndarray
+        ``(N, D)`` raw rows; id ``i`` is row ``i`` (the engine's id
+        space for the base dataset).
+    k : int
+        Depth of the recall estimate (``recall@k``).
+    every : int
+        Shadow-rerank one request out of this many (per tier,
+        deterministic round-robin — no RNG, so runs are reproducible).
+    metric : str
+        ``"l2"`` or ``"ip"``; must match the served index.
+    """
+
+    def __init__(self, vectors: np.ndarray, *, k: int = 10, every: int = 8,
+                 metric: str = "l2"):
+        """Snapshot the row matrix and sampling cadence for the probe."""
+        self.vectors = np.asarray(vectors, dtype=np.float32)
+        self.k = int(k)
+        self.every = max(1, int(every))
+        self.metric = metric
+        # snapshot norms once; recomputing this O(N*D) term per sampled
+        # request would dominate the probe's cost on large snapshots
+        self._v_sq = (np.sum(self.vectors * self.vectors, axis=1)
+                      if metric == "l2" else None)
+        self._seen: dict[str, int] = {}
+        # per-tier running sums: (matched ids, compared ids)
+        self._hits: dict[str, int] = {}
+        self._total: dict[str, int] = {}
+        self._registry = None
+
+    def bind(self, registry: MetricsRegistry) -> None:
+        """Attach the registry that receives the gauges (first bind wins)."""
+        if self._registry is None:
+            self._registry = registry
+
+    def observe(self, req, mode: str) -> None:
+        """Maybe shadow-rerank one completed request for tier ``mode``.
+
+        ``req`` needs ``queries``, ``ids`` and ``k`` (duck-typed so
+        fleet-level and engine-level request objects both work). Only
+        every ``self.every``-th call per tier actually reranks.
+        """
+        n = self._seen.get(mode, 0)
+        self._seen[mode] = n + 1
+        if n % self.every != 0 or req.ids is None:
+            return
+        k = min(self.k, int(req.k))
+        exact = exact_topk_ids(req.queries, self.vectors, k, self.metric,
+                               v_sq=self._v_sq)
+        got = np.asarray(req.ids)[:, :k]
+        # per-row intersection size: returned ids are unique within a row
+        # (top-k of distinct points; only the -1 padding repeats, masked
+        # out here), so counting membership equals the set intersection
+        hits = int((((got[:, :, None] == exact[:, None, :]).any(-1))
+                    & (got >= 0)).sum())
+        self._hits[mode] = self._hits.get(mode, 0) + hits
+        self._total[mode] = self._total.get(mode, 0) + got.shape[0] * k
+        if self._registry is not None:
+            self._registry.counter(
+                "juno_recall_samples_total", mode=mode).inc(got.shape[0])
+            self._registry.gauge(
+                "juno_recall_online_at_k", mode=mode,
+                k=str(k)).set(self.estimate(mode))
+
+    def estimate(self, mode: str) -> float:
+        """Current recall@k estimate for a tier (0.0 before any sample)."""
+        total = self._total.get(mode, 0)
+        if total == 0:
+            return 0.0
+        return self._hits.get(mode, 0) / total

@@ -36,6 +36,7 @@ fixed-shape argument).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Optional
@@ -111,7 +112,8 @@ class AnnServeEngine:
                  fused: bool = False, fused3: bool | None = None,
                  prefilter: str = "scan",
                  rt_scale: float = 1.0, max_minors: int = 0,
-                 merge_clusters_per_step: int = 32):
+                 merge_clusters_per_step: int = 32,
+                 obs=None):
         """Wrap an index (mutable or not) in a serving engine.
 
         Parameters
@@ -160,6 +162,14 @@ class AnnServeEngine:
             single-SideBuffer behavior.
         merge_clusters_per_step : int
             Fold budget per between-ticks merge step (clusters).
+        obs : repro.obs.Observability or bool, optional
+            Observability bundle: metrics land in ``obs.registry`` under
+            the ``juno_engine_*`` names, engine ticks open nested spans
+            in ``obs.tracer``, and ``obs.recall`` (when set) shadows a
+            sample of served requests for online recall@k. ``True``
+            creates a fresh bundle. Instrumentation is host-side only:
+            no jit argument changes, no new signatures, bit-identical
+            results (pinned by tests/test_obs.py). Default None = off.
         """
         # any MutableIndexBase works as the served index: the sharded
         # DistributedMutableIndex flows through here too (the fleet layer's
@@ -170,6 +180,14 @@ class AnnServeEngine:
         self.metric = metric
         self.impl = impl
         self.thres_scale = thres_scale
+        # observability is opt-in and host-side only (see docstring)
+        if obs is True:
+            from repro.obs import Observability
+            obs = Observability()
+        self.obs = obs or None
+        #: signatures already traced, keyed (k, mode, nprobe, bucket,
+        #: side-is-empty) — drives juno_engine_jit_retraces_total
+        self._obs_sigs: set = set()
         if prefilter not in ("scan", "rt"):
             raise ValueError(f"unknown prefilter {prefilter!r}")
         self.prefilter = prefilter
@@ -185,7 +203,8 @@ class AnnServeEngine:
             from repro.core.freshness import MergeScheduler
             self.index.enable_tiers(max_minors)
             self.scheduler = MergeScheduler(
-                self.index, clusters_per_step=merge_clusters_per_step)
+                self.index, clusters_per_step=merge_clusters_per_step,
+                registry=self.obs.registry if self.obs else None)
         #: route the high-recall tiers (H and H2) through the fused
         #: two-stage kernel path: both collapse onto ONE jit signature
         #: (mode "H2", rerank = FUSED_RERANK_MULT·k), so their requests
@@ -211,6 +230,12 @@ class AnnServeEngine:
         self.stats = {"queries": 0, "requests": 0, "ticks": 0,
                       "padded_rows": 0, "inserts": 0, "deletes": 0,
                       "swaps": 0, "signatures": collections.Counter()}
+
+    def _span(self, name: str, trace_id: str = None, **attrs):
+        """Tracer span context when obs is on; no-op context otherwise."""
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.tracer.span(name, trace_id=trace_id, **attrs)
 
     # ---- request plane ---------------------------------------------------
     def submit(self, queries, *, k: int = 10, mode: str = "auto",
@@ -304,10 +329,13 @@ class AnnServeEngine:
                     # host routing state
                     self._rt_state = (grid, rt_lib.routing_state(
                         grid, self.index.data), muts)
-                req.rt_probes = int(rt_lib.probe_budget(
-                    grid, self.index.data, req.queries, metric=self.metric,
-                    scale=self.rt_scale, thres_scale=self.thres_scale,
-                    max_probes=nprobe, state=self._rt_state[1]).max())
+                with self._span("engine.rt_probe", trace_id=str(req.rid),
+                                rows=req.queries.shape[0]):
+                    req.rt_probes = int(rt_lib.probe_budget(
+                        grid, self.index.data, req.queries,
+                        metric=self.metric, scale=self.rt_scale,
+                        thres_scale=self.thres_scale,
+                        max_probes=nprobe, state=self._rt_state[1]).max())
                 req.rt_epoch = muts
             shrunk = next((b for b in self.RT_NPROBE_BUCKETS
                            if b >= max(req.rt_probes, 1)),
@@ -321,6 +349,16 @@ class AnnServeEngine:
         """Serve one signature group in one jitted call. Returns #queries."""
         if not self.queue:
             return 0
+        if self.obs is not None:
+            # queue depth sampled at tick entry; agg="sum" so the fleet
+            # view adds replicas' backlogs instead of picking one
+            self.obs.registry.gauge("juno_engine_queue_rows",
+                                    agg="sum").set(self.queued_rows)
+        with self._span("engine.tick"):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
+        """One tick's pick → dispatch → merge body (inside the tick span)."""
         sig = self.route(self.queue[0])
         max_rows = self.batch_buckets[-1]
         # one linear pass: pick head-signature requests FIFO until the batch
@@ -356,9 +394,15 @@ class AnnServeEngine:
             bucket = next(b for b in self.batch_buckets if b >= n)
             if n < bucket:  # in-distribution pad rows (see module docstring)
                 chunk = np.pad(chunk, ((0, bucket - n), (0, 0)), mode="edge")
-            s, ids = self._dispatch(jnp.asarray(chunk), k, mode, nprobe, side)
-            out_s.append(np.asarray(s)[:n])
-            out_i.append(np.asarray(ids)[:n])
+            if self.obs is not None:
+                self._observe_dispatch(k, mode, nprobe, bucket, n,
+                                       side is None)
+            with self._span("engine.dispatch", mode=mode, k=k,
+                            nprobe=nprobe, bucket=bucket, rows=n):
+                s, ids = self._dispatch(jnp.asarray(chunk), k, mode,
+                                        nprobe, side)
+                out_s.append(np.asarray(s)[:n])
+                out_i.append(np.asarray(ids)[:n])
             self.stats["padded_rows"] += bucket - n
             self.stats["signatures"][(k, mode, nprobe, bucket)] += 1
         # np.asarray above forced host materialization, so this bounds the
@@ -366,18 +410,21 @@ class AnnServeEngine:
         t_compute = time.perf_counter()
         s, ids = np.concatenate(out_s), np.concatenate(out_i)
 
-        off, now = 0, time.perf_counter()
-        for req in picked:
-            q = req.queries.shape[0]
-            req.scores = s[off:off + q, :req.k]
-            req.ids = ids[off:off + q, :req.k]
-            req.t_batch, req.t_compute = t_batch, t_compute
-            req.done, req.t_done = True, now
-            off += q
-            self.completed.append(req)
+        with self._span("engine.merge", requests=len(picked)):
+            off, now = 0, time.perf_counter()
+            for req in picked:
+                q = req.queries.shape[0]
+                req.scores = s[off:off + q, :req.k]
+                req.ids = ids[off:off + q, :req.k]
+                req.t_batch, req.t_compute = t_batch, t_compute
+                req.done, req.t_done = True, now
+                off += q
+                self.completed.append(req)
         self.stats["queries"] += rows
         self.stats["requests"] += len(picked)
         self.stats["ticks"] += 1
+        if self.obs is not None:
+            self._observe_served(picked, mode, rows)
         if self.scheduler is not None:
             # background merge: one bounded step between ticks (the same
             # control-path hook pattern as swap_index), so promotions and
@@ -404,6 +451,51 @@ class AnnServeEngine:
             metric=self.metric, thres_scale=self.thres_scale,
             impl=self.impl, side=side, **rt_kw)
 
+    def _observe_dispatch(self, k, mode, nprobe, bucket, n, empty_side):
+        """Record per-dispatch registry metrics (obs is known non-None).
+
+        Batch occupancy lands in ``juno_engine_batch_fill_ratio``; the
+        first time a (signature, side-emptiness) combination is
+        dispatched it counts as a jit retrace
+        (``juno_engine_jit_retraces_total``) — side=None and side≠None
+        are separate traces, so emptiness is part of the key.
+        """
+        reg = self.obs.registry
+        reg.histogram("juno_engine_batch_fill_ratio", lo=1e-3, hi=1.0,
+                      mode=mode).add(n / bucket)
+        sig_key = (k, mode, nprobe, bucket, empty_side)
+        if sig_key not in self._obs_sigs:
+            self._obs_sigs.add(sig_key)
+            reg.counter("juno_engine_jit_retraces_total").inc()
+
+    def _observe_served(self, picked, mode, rows):
+        """Record per-request metrics + spans for one served tick.
+
+        Feeds the per-tier latency histograms (the documented registry
+        form of :meth:`latency_stats`), retro-stamps one
+        ``engine.enqueue`` span per request (submit → batch formation,
+        i.e. queue wait), and hands a sample of requests to the recall
+        probe when the bundle carries one.
+        """
+        reg, tracer = self.obs.registry, self.obs.tracer
+        reg.counter("juno_engine_ticks_total").inc()
+        reg.counter("juno_engine_queries_total").inc(rows)
+        reg.counter("juno_engine_requests_total", mode=mode).inc(len(picked))
+        lat = reg.histogram("juno_engine_request_seconds", mode=mode)
+        h_queue = reg.histogram("juno_engine_queue_seconds")
+        h_compute = reg.histogram("juno_engine_compute_seconds")
+        h_merge = reg.histogram("juno_engine_merge_seconds")
+        for req in picked:
+            lat.add(req.latency)
+            h_queue.add(req.t_batch - req.t_submit)
+            h_compute.add(req.t_compute - req.t_batch)
+            h_merge.add(req.t_done - req.t_compute)
+            tracer.record("engine.enqueue", req.t_submit, req.t_batch,
+                          trace_id=str(req.rid),
+                          rows=req.queries.shape[0], mode=mode)
+            if self.obs.recall is not None:
+                self.obs.recall.observe(req, mode)
+
     def run(self, max_ticks: int = 100_000) -> int:
         """Drain the queue; returns total queries served."""
         total = 0
@@ -423,6 +515,9 @@ class AnnServeEngine:
         """
         ids = self.index.insert(points)
         self.stats["inserts"] += len(ids)
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "juno_engine_inserts_total").inc(len(ids))
         return ids
 
     def delete(self, ids) -> int:
@@ -433,6 +528,8 @@ class AnnServeEngine:
         """
         n = self.index.delete(ids)
         self.stats["deletes"] += n
+        if self.obs is not None:
+            self.obs.registry.counter("juno_engine_deletes_total").inc(n)
         return n
 
     def compact(self, *, rebuild: bool | str = "auto") -> int:
@@ -509,11 +606,20 @@ class AnnServeEngine:
         self._rt_state = None    # routing snapshot belongs to the old grid
         self.generation += 1
         self.stats["swaps"] += 1
+        if self.obs is not None:
+            self.obs.registry.counter("juno_engine_swaps_total").inc()
         return self.generation
 
     # ---- observability ---------------------------------------------------
     def latency_stats(self) -> dict:
-        """Latency percentiles over completed requests.
+        """Latency percentiles over completed requests (deprecated alias).
+
+        The ad-hoc key names here predate ``repro.obs``; the documented
+        form of the same signal is the registry's per-tier
+        ``juno_engine_request_seconds`` histogram (plus the
+        queue/compute/merge segment histograms), populated when the
+        engine is constructed with ``obs=``. This dict is kept as a
+        deprecated back-compat alias for existing callers.
 
         Returns
         -------

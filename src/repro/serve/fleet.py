@@ -46,86 +46,24 @@ from typing import Optional
 import numpy as np
 
 from repro.core.juno import JunoIndexData
+from repro.obs import Histogram as _ObsHistogram
 from repro.serve.ann import AnnRequest, AnnServeEngine
 
 
-class LatencyHistogram:
-    """Streaming log-bucketed latency histogram with percentile queries.
+class LatencyHistogram(_ObsHistogram):
+    """Streaming log-bucketed latency histogram (back-compat alias).
 
-    Fixed memory (one int64 count per bucket), so it can absorb an
-    unbounded request stream: buckets are geometrically spaced between
-    ``lo`` and ``hi`` seconds at ``bins_per_decade`` buckets per decade
-    (default 24 → ≤ ~10 % relative resolution). ``percentile`` returns
-    the **upper edge** of the bucket holding the requested quantile
-    (clamped to the exact observed max), i.e. a conservative
-    tail-latency estimate — an SLO gate on it can over-reject by at most
-    one bucket width, never under-reject.
+    This class began here and was relocated to
+    :class:`repro.obs.Histogram` as the registry's general histogram
+    primitive; it remains as a subclass so existing imports, pickles of
+    summaries, and the fleet's resettable warm-up/timed-run accounting
+    keep working. Semantics are unchanged: fixed memory (one int64
+    count per geometric bucket between ``lo`` and ``hi`` seconds),
+    fail-closed ``merge`` comparing bucket *edges*, and ``percentile``
+    returning the conservative upper bucket edge (clamped to the exact
+    observed max) — an SLO gate on it can over-reject by at most one
+    bucket width, never under-reject.
     """
-
-    def __init__(self, lo: float = 1e-6, hi: float = 500.0,
-                 bins_per_decade: int = 24):
-        """Allocate the bucket table spanning [lo, hi] seconds.
-
-        Parameters
-        ----------
-        lo, hi : float
-            Smallest / largest latency resolved exactly; values outside
-            land in the under/overflow buckets.
-        bins_per_decade : int
-            Geometric bucket density (resolution ≈ ``10^(1/bins)``).
-        """
-        n_edges = int(math.ceil(math.log10(hi / lo) * bins_per_decade)) + 1
-        #: upper edge of bucket b is _edges[b]; the final bucket (index
-        #: len(_edges)) is the overflow bucket, bounded by the exact max
-        self._edges = lo * 10.0 ** (np.arange(n_edges) / bins_per_decade)
-        self._counts = np.zeros(n_edges + 1, np.int64)
-        self.n = 0
-        self.sum = 0.0
-        self.max = 0.0
-
-    def add(self, seconds: float) -> None:
-        """Record one latency observation (in seconds)."""
-        s = float(seconds)
-        b = int(np.searchsorted(self._edges, s, side="left"))
-        self._counts[b] += 1
-        self.n += 1
-        self.sum += s
-        self.max = max(self.max, s)
-
-    def merge(self, other: "LatencyHistogram") -> None:
-        """Fold another histogram (same bucketing) into this one.
-
-        The bucketings must be identical, which means the *edges* must
-        match — two histograms with different ``lo``/``bins_per_decade``
-        can land on the same bucket count (e.g. ``lo=1e-5, hi=5000`` vs
-        the defaults), and folding those counts together would corrupt
-        every percentile. Raises ValueError on any mismatch.
-        """
-        if not np.array_equal(other._edges, self._edges):
-            raise ValueError("histogram bucketings differ")
-        self._counts += other._counts
-        self.n += other.n
-        self.sum += other.sum
-        self.max = max(self.max, other.max)
-
-    def percentile(self, p: float) -> float:
-        """Upper-edge estimate of the ``p`` quantile (0 < p <= 1)."""
-        if self.n == 0:
-            return 0.0
-        target = max(1, int(math.ceil(p * self.n)))
-        cum = np.cumsum(self._counts)
-        b = int(np.searchsorted(cum, target))
-        edge = self._edges[b] if b < len(self._edges) else self.max
-        return float(min(edge, self.max))
-
-    def summary(self) -> dict:
-        """``{"n", "mean", "p50", "p95", "p99", "max"}`` in seconds."""
-        if self.n == 0:
-            return {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
-                    "p99": 0.0, "max": 0.0}
-        return {"n": self.n, "mean": self.sum / self.n,
-                "p50": self.percentile(0.50), "p95": self.percentile(0.95),
-                "p99": self.percentile(0.99), "max": self.max}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,7 +211,7 @@ class AnnServeFleet:
                  shards_per_replica: int = 1, max_queue: int = 1024,
                  policy: str = "queue",
                  default_deadline_s: Optional[float] = None,
-                 side_capacity: int = 256, **engine_kw):
+                 side_capacity: int = 256, obs=None, **engine_kw):
         """Build the fleet topology over a built index.
 
         Parameters
@@ -304,6 +242,13 @@ class AnnServeFleet:
             carry its own; expired requests drop before compute.
         side_capacity : int
             Side-buffer capacity per replica.
+        obs : repro.obs.Observability or bool, optional
+            Fleet-level observability: each replica engine gets its own
+            child registry (one shared tracer and recall probe), fleet
+            admission/latency metrics land in ``obs.registry`` under the
+            ``juno_fleet_*`` names, and :meth:`merged_registry` folds
+            everything into one fleet view. ``True`` creates a fresh
+            bundle. Default None = off.
         **engine_kw
             Forwarded to every replica's :class:`AnnServeEngine`
             (``metric``, ``batch_buckets``, ``impl``, ...).
@@ -315,7 +260,22 @@ class AnnServeFleet:
         self.policy = policy
         self.max_queue = max_queue
         self.default_deadline_s = default_deadline_s
+        if obs is True:
+            from repro.obs import Observability
+            obs = Observability()
+        self.obs = obs or None
+        if self.obs is not None and self.obs.recall is not None:
+            # recall gauges land in the FLEET registry (first bind wins)
+            self.obs.recall.bind(self.obs.registry)
         self.engines: list[AnnServeEngine] = []
+
+        def _ekw() -> dict:
+            # per-replica engine kwargs: each replica gets its own child
+            # registry so merged_registry() can fold them fail-closed
+            kw = dict(engine_kw)
+            if self.obs is not None:
+                kw["obs"] = self.obs.child()
+            return kw
         # imported lazily: the paged tier pulls in the artifact store and
         # is only needed when the caller actually serves out-of-core
         from repro.serve.paged import PagedAnnServeEngine, PagedIndexData
@@ -327,7 +287,12 @@ class AnnServeFleet:
                     "split; scale reads with n_replicas instead")
             for _ in range(n_replicas):
                 self.engines.append(PagedAnnServeEngine(
-                    index, side_capacity=side_capacity, **engine_kw))
+                    index, side_capacity=side_capacity, **_ekw()))
+            if self.obs is not None:
+                # the replicas share ONE mmap + cluster cache: its series
+                # belong to the fleet registry, not any replica's child
+                # (each engine ctor bound its own — this rebind wins)
+                index.bind_obs(self.obs)
         elif shards_per_replica > 1:
             import jax
             from jax.sharding import Mesh
@@ -343,11 +308,11 @@ class AnnServeFleet:
                     devs[r * shards_per_replica:(r + 1) * shards_per_replica]
                 ), ("data",))
                 self.engines.append(_ShardedAnnServeEngine(
-                    index, mesh, side_capacity=side_capacity, **engine_kw))
+                    index, mesh, side_capacity=side_capacity, **_ekw()))
         else:
             for _ in range(n_replicas):
                 self.engines.append(AnnServeEngine(
-                    index, side_capacity=side_capacity, **engine_kw))
+                    index, side_capacity=side_capacity, **_ekw()))
         self.n_replicas = n_replicas
         self.shards_per_replica = shards_per_replica
         self.backlog: collections.deque[FleetRequest] = collections.deque()
@@ -395,6 +360,7 @@ class AnnServeFleet:
             freq.status = "shed"
             freq.rejection = Rejection("no_replica", "all replicas down")
             self.stats["shed"] += 1
+            self._count_shed("no_replica")
             return
         if self.outstanding(replica) >= self.max_queue:
             if self.policy == "shed":
@@ -404,10 +370,17 @@ class AnnServeFleet:
                     f"least-loaded replica {replica} at max_queue="
                     f"{self.max_queue} rows")
                 self.stats["shed"] += 1
+                self._count_shed("queue_full")
             else:
                 self.backlog.append(freq)   # stays status "queued"
             return
         self._place(freq, replica)
+
+    def _count_shed(self, reason: str) -> None:
+        """Bump the per-reason fleet shed counter when obs is on."""
+        if self.obs is not None:
+            self.obs.registry.counter("juno_fleet_shed_total",
+                                      reason=reason).inc()
 
     def submit(self, queries, *, k: int = 10, mode: str = "auto",
                nprobe: int = 0, recall_target: float = 0.9,
@@ -450,6 +423,8 @@ class AnnServeFleet:
             t_arrival=now if t_arrival is None else t_arrival)
         self._rid += 1
         self.stats["submitted"] += 1
+        if self.obs is not None:
+            self.obs.registry.counter("juno_fleet_submitted_total").inc()
         self._admit(freq)
         return freq
 
@@ -461,6 +436,8 @@ class AnnServeFleet:
         if freq.inner is not None:
             self._by_inner.pop(id(freq.inner), None)
         self.stats["expired"] += 1
+        if self.obs is not None:
+            self.obs.registry.counter("juno_fleet_expired_total").inc()
 
     def _expire(self, now: float) -> None:
         """Drop queued/backlogged requests whose deadline has passed."""
@@ -507,7 +484,37 @@ class AnnServeFleet:
                 self.seg[segment] += tr[segment]
             self.stats["served"] += 1
             self.stats["per_replica"][replica]["served"] += 1
+            if self.obs is not None:
+                self._observe_served(freq, inner, tr, replica)
         eng.completed.clear()
+
+    def _observe_served(self, freq: FleetRequest, inner: AnnRequest,
+                        tr: dict, replica: int) -> None:
+        """Registry + tracer view of one served request (obs non-None).
+
+        The request's whole lifetime becomes a retro-stamped
+        ``fleet.request`` span with queue/compute/merge children (the
+        span-level extension of :meth:`FleetRequest.trace`); latency and
+        segments feed the cumulative ``juno_fleet_*`` histograms, which
+        unlike the legacy resettable ``hist``/``seg`` survive
+        :meth:`reset_metrics`.
+        """
+        reg, tracer = self.obs.registry, self.obs.tracer
+        reg.counter("juno_fleet_served_total",
+                    replica=str(replica)).inc()
+        reg.histogram("juno_fleet_request_seconds").add(tr["total"])
+        for segment in ("queue", "compute", "merge"):
+            reg.histogram(f"juno_fleet_{segment}_seconds").add(tr[segment])
+        tid = f"fleet-{freq.rid}"
+        root = tracer.record("fleet.request", freq.t_arrival, inner.t_done,
+                             trace_id=tid, replica=replica,
+                             mode=freq.mode, rows=freq.queries.shape[0])
+        tracer.record("fleet.queue", freq.t_arrival, inner.t_batch,
+                      trace_id=tid, parent=root)
+        tracer.record("fleet.compute", inner.t_batch, inner.t_compute,
+                      trace_id=tid, parent=root)
+        tracer.record("fleet.merge", inner.t_compute, inner.t_done,
+                      trace_id=tid, parent=root)
 
     def step(self) -> int:
         """One fleet tick: expire, drain backlog, tick every replica.
@@ -571,6 +578,8 @@ class AnnServeFleet:
             self._admit(freq)
             n += 1
         self.stats["rerouted"] += n
+        if self.obs is not None and n:
+            self.obs.registry.counter("juno_fleet_rerouted_total").inc(n)
         return n
 
     def restore_replica(self, replica: int) -> None:
@@ -596,6 +605,9 @@ class AnnServeFleet:
                 raise RuntimeError(
                     f"replica {r} id divergence: {ids[:4]} vs {ids0[:4]}")
         self.stats["inserts"] += len(ids0)
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "juno_fleet_inserts_total").inc(len(ids0))
         return ids0
 
     def delete(self, ids) -> int:
@@ -611,6 +623,29 @@ class AnnServeFleet:
         return sum(eng.compact(**kw) for eng in self.engines)
 
     # ---- observability ---------------------------------------------------
+    def merged_registry(self):
+        """One fleet-wide metrics view: fleet + every replica registry.
+
+        Returns a FRESH :class:`repro.obs.MetricsRegistry` built by
+        fail-closed merging (``MetricsRegistry.merge``) of the fleet
+        bundle's registry and each replica engine's child registry —
+        counters sum, sum-aggregated gauges (queue depth) add across
+        replicas, histograms fold bucket-by-bucket. The live registries
+        are never mutated, so this can be called repeatedly (e.g. per
+        scrape). Raises RuntimeError when the fleet was built without
+        ``obs=``.
+        """
+        if self.obs is None:
+            raise RuntimeError("fleet was built without obs=; nothing "
+                               "to merge")
+        from repro.obs import MetricsRegistry
+        merged = MetricsRegistry()
+        merged.merge(self.obs.registry)
+        for eng in self.engines:
+            if eng.obs is not None:
+                merged.merge(eng.obs.registry)
+        return merged
+
     def latency_summary(self) -> dict:
         """Streaming latency + admission summary of the fleet.
 
@@ -634,7 +669,10 @@ class AnnServeFleet:
         """Zero the latency histogram, segment sums and counters.
 
         Engine/jit state and index contents are untouched — benchmarks
-        call this between the warm-up replay and the timed replay.
+        call this between the warm-up replay and the timed replay. The
+        ``repro.obs`` registries are deliberately NOT reset: registry
+        series are cumulative by contract (Prometheus semantics), so a
+        scrape delta over them stays meaningful across resets here.
         """
         self.hist = LatencyHistogram()
         self.seg = {k: 0.0 for k in self.seg}

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -71,15 +72,48 @@ class ClusterCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._m = None          # registry metric handles once bound
+        self._bound_to = None   # the registry the handles live in
+
+    def bind(self, registry) -> None:
+        """Mirror the counters into a ``repro.obs`` registry.
+
+        Registers the documented ``juno_cache_*`` series (the ad-hoc
+        int attributes and :meth:`stats` keys stay as the deprecated
+        alias) and seeds them with the counts accumulated so far, so
+        binding after warm-up loses nothing. Re-binding to the same
+        registry is a no-op (generation swaps re-bind the adopted
+        cache) — the seed must not double-count.
+        """
+        if self._bound_to is registry:
+            return
+        self._bound_to = registry
+        m = {"hits": registry.counter("juno_cache_hits_total"),
+             "misses": registry.counter("juno_cache_misses_total"),
+             "evictions": registry.counter("juno_cache_evictions_total"),
+             "evicted_bytes": registry.counter(
+                 "juno_cache_evicted_bytes_total"),
+             "bytes": registry.gauge("juno_cache_bytes", agg="sum"),
+             "rows": registry.gauge("juno_cache_rows", agg="sum")}
+        m["hits"].inc(self.hits)
+        m["misses"].inc(self.misses)
+        m["evictions"].inc(self.evictions)
+        m["bytes"].set(self.bytes)
+        m["rows"].set(len(self._rows))
+        self._m = m
 
     def get(self, cid: int) -> np.ndarray | None:
         """Return the cached row for ``cid`` (refreshing LRU) or None."""
         row = self._rows.get(cid)
         if row is None:
             self.misses += 1
+            if self._m is not None:
+                self._m["misses"].inc()
             return None
         self._rows.move_to_end(cid)
         self.hits += 1
+        if self._m is not None:
+            self._m["hits"].inc()
         return row
 
     def put(self, cid: int, row: np.ndarray) -> None:
@@ -91,8 +125,14 @@ class ClusterCache:
             _, old = self._rows.popitem(last=False)
             self.bytes -= old.nbytes
             self.evictions += 1
+            if self._m is not None:
+                self._m["evictions"].inc()
+                self._m["evicted_bytes"].inc(old.nbytes)
         self._rows[cid] = row
         self.bytes += nb
+        if self._m is not None:
+            self._m["bytes"].set(self.bytes)
+            self._m["rows"].set(len(self._rows))
 
     def clear(self) -> None:
         """Drop every cached row (capacity and counters are kept)."""
@@ -105,7 +145,12 @@ class ClusterCache:
 
     def stats(self) -> dict:
         """``{"capacity_bytes", "bytes", "rows", "hits", "misses",
-        "evictions"}`` — a snapshot of the cache counters."""
+        "evictions"}`` — deprecated-alias snapshot of the counters.
+
+        These ad-hoc keys predate ``repro.obs``; the documented form is
+        the ``juno_cache_*`` registry series a :meth:`bind` call keeps
+        in lockstep with the same numbers.
+        """
         return {"capacity_bytes": self.capacity_bytes, "bytes": self.bytes,
                 "rows": len(self._rows), "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions}
@@ -200,10 +245,23 @@ class PagedIndexData:
             vectors = np.load(vectors, mmap_mode="r")
         self.vectors = vectors
         self.cache = ClusterCache(cache_bytes)
+        self._obs = None        # Observability bundle once bound
         pid = np.asarray(loaded.data.ivf.point_ids)
         valid = np.asarray(loaded.data.ivf.valid)
         #: smallest id no committed point uses — seeds the mutable wrapper
         self.first_new_id = int(pid[valid].max(initial=-1)) + 1
+
+    def bind_obs(self, obs) -> None:
+        """Attach an ``repro.obs.Observability`` bundle to the fetch plane.
+
+        Binds the cluster cache's counters to ``obs.registry`` and turns
+        every cache miss into a ``paged.fault`` span plus
+        ``juno_paged_faults_total`` / ``juno_paged_fault_bytes_total``
+        counters, with first-touch digest time observed into
+        ``juno_paged_verify_seconds``.
+        """
+        self._obs = obs
+        self.cache.bind(obs.registry)
 
     # ---- paged fetch plane ----------------------------------------------
     def fetch_cluster(self, cid: int) -> np.ndarray:
@@ -218,15 +276,32 @@ class PagedIndexData:
         row = self.cache.get(cid)
         if row is not None:
             return row
+        if self._obs is not None:
+            with self._obs.tracer.span("paged.fault", cluster=cid):
+                row = self._fault_in(cid)
+            self._obs.registry.counter("juno_paged_faults_total").inc()
+            self._obs.registry.counter(
+                "juno_paged_fault_bytes_total").inc(row.nbytes)
+        else:
+            row = self._fault_in(cid)
+        self.cache.put(cid, row)
+        return row
+
+    def _fault_in(self, cid: int) -> np.ndarray:
+        """Miss path: mmap read + first-touch digest check for one cluster."""
         row = np.ascontiguousarray(self._cluster_codes[cid])
         if self._row_digests is not None and not self._verified[cid]:
+            t0 = time.perf_counter()
             if _array_digest(row) != self._row_digests[cid]:
                 raise ArtifactError(
                     f"cluster_codes[{cid}]: checksum mismatch on first "
                     f"touch ({self.path})")
             self._verified[cid] = True
             self.verified_rows += 1
-        self.cache.put(cid, row)
+            if self._obs is not None:
+                self._obs.registry.histogram(
+                    "juno_paged_verify_seconds").add(
+                        time.perf_counter() - t0)
         return row
 
     def gather(self, cids) -> np.ndarray:
@@ -571,6 +646,8 @@ class PagedAnnServeEngine(AnnServeEngine):
         if minor_store is not None:
             index._minor_sink = (minor_store, minor_name)
         super().__init__(index, side_capacity=side_capacity, **kw)
+        if self.obs is not None:
+            index.paged.bind_obs(self.obs)
 
     def _dispatch(self, qb, k, mode, nprobe, side):
         """One padded batch: filter jit → cache gather → scoring jit."""
@@ -583,23 +660,26 @@ class PagedAnnServeEngine(AnnServeEngine):
         p = self.index.data.ivf.point_ids.shape[1]
         kq = k if not self.exact_rerank else min(max(k, self.exact_rerank),
                                                  nprobe * p)
-        base, cids = _paged_filter(self.index.data.ivf, qb, nprobe=nprobe,
-                                   metric=self.metric)
-        codes = jnp.asarray(self.index.paged.gather(np.asarray(cids)))
-        if mode == "H2":
-            s, ids = _paged_score_two_stage(
-                self.index.data, qb, base, cids, codes, k=kq,
-                metric=self.metric, thres_scale=self.thres_scale,
-                rerank=self.FUSED_RERANK_MULT * k if self.fused else 0,
-                impl=self.impl, fused=self.fused, fused3=self.fused3,
-                side=side, prefilter=prefilter, rt_grid=rt_grid,
-                rt_scale=rt_scale)
-        else:
-            s, ids = _paged_score(
-                self.index.data, qb, base, cids, codes, k=kq, mode=mode,
-                metric=self.metric, thres_scale=self.thres_scale,
-                impl=self.impl, side=side, prefilter=prefilter,
-                rt_grid=rt_grid, rt_scale=rt_scale)
+        with self._span("paged.filter", nprobe=nprobe):
+            base, cids = _paged_filter(self.index.data.ivf, qb,
+                                       nprobe=nprobe, metric=self.metric)
+        with self._span("paged.gather"):
+            codes = jnp.asarray(self.index.paged.gather(np.asarray(cids)))
+        with self._span("paged.score", mode=mode):
+            if mode == "H2":
+                s, ids = _paged_score_two_stage(
+                    self.index.data, qb, base, cids, codes, k=kq,
+                    metric=self.metric, thres_scale=self.thres_scale,
+                    rerank=self.FUSED_RERANK_MULT * k if self.fused else 0,
+                    impl=self.impl, fused=self.fused, fused3=self.fused3,
+                    side=side, prefilter=prefilter, rt_grid=rt_grid,
+                    rt_scale=rt_scale)
+            else:
+                s, ids = _paged_score(
+                    self.index.data, qb, base, cids, codes, k=kq, mode=mode,
+                    metric=self.metric, thres_scale=self.thres_scale,
+                    impl=self.impl, side=side, prefilter=prefilter,
+                    rt_grid=rt_grid, rt_scale=rt_scale)
         if self.exact_rerank:
             s, ids = self._rerank_exact(qb, ids, k)
         return s, ids
@@ -668,7 +748,12 @@ class PagedAnnServeEngine(AnnServeEngine):
             raise RuntimeError(
                 "paged serving cannot rebuild in-process; pass a "
                 "PagedIndexData over the next artifact generation")
-        return super().swap_index(new_data)
+        gen = super().swap_index(new_data)
+        if self.obs is not None:
+            # the adopted cache keeps its registry handles, but the new
+            # generation's fetch plane needs its own obs binding
+            self.index.paged.bind_obs(self.obs)
+        return gen
 
     def cache_stats(self) -> dict:
         """Paged-tier observability: cache + verify counters

@@ -23,6 +23,10 @@ from repro.core.freshness import (MergeScheduler, MinorGeneration,
 from repro.core.juno import MutableIndexBase, MutableJunoIndex
 from repro.dist.distributed_index import DistributedMutableIndex
 from repro.kernels import ops
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       Observability, RecallProbe, Span, Tracer,
+                       exact_topk_ids, read_jsonl, registry_from_events,
+                       to_events, validate_events, write_jsonl)
 from repro.serve.ann import AnnRequest, AnnServeEngine
 from repro.serve.fleet import (AnnServeFleet, FleetRequest, LatencyHistogram,
                                Rejection)
@@ -88,6 +92,17 @@ PUBLIC = [
     FleetRequest, FleetRequest.trace, Rejection,
     LatencyHistogram, LatencyHistogram.add, LatencyHistogram.merge,
     LatencyHistogram.percentile, LatencyHistogram.summary,
+    # observability layer (repro.obs)
+    Counter, Counter.inc, Counter.merge, Gauge, Gauge.set, Gauge.merge,
+    Histogram, Histogram.add, Histogram.merge, Histogram.percentile,
+    Histogram.summary, MetricsRegistry, MetricsRegistry.counter,
+    MetricsRegistry.gauge, MetricsRegistry.histogram,
+    MetricsRegistry.merge, MetricsRegistry.snapshot,
+    MetricsRegistry.render_text, Span, Tracer, Tracer.span, Tracer.record,
+    Observability, Observability.child, RecallProbe, RecallProbe.observe,
+    RecallProbe.estimate, exact_topk_ids, to_events, write_jsonl,
+    read_jsonl, validate_events, registry_from_events,
+    AnnServeFleet.merged_registry, build.ArtifactStore.verify,
     # paged (out-of-core) serving tier
     ClusterCache, ClusterCache.get, ClusterCache.put, ClusterCache.stats,
     PagedIndexData, PagedIndexData.__init__, PagedIndexData.fetch_cluster,
@@ -126,6 +141,11 @@ def test_public_modules_have_docstrings():
     import repro.kernels.fused_three_stage
     import repro.kernels.fused_two_stage
     import repro.kernels.ref
+    import repro.obs
+    import repro.obs.export
+    import repro.obs.recall
+    import repro.obs.registry
+    import repro.obs.trace
     import repro.rt.grid
     import repro.rt.intersect
     import repro.serve.ann
@@ -139,5 +159,6 @@ def test_public_modules_have_docstrings():
                 repro.kernels.fused_three_stage, repro.kernels.autotune,
                 repro.dist.distributed_index,
                 repro.build.pipeline, repro.build.store, repro.build.rebuild,
-                repro.build.merge]:
+                repro.build.merge, repro.obs, repro.obs.registry,
+                repro.obs.trace, repro.obs.export, repro.obs.recall]:
         assert mod.__doc__ and len(mod.__doc__.split()) >= 10, mod.__name__

@@ -1,0 +1,93 @@
+"""Render or validate a ``juno.obs.v1`` JSONL metrics/trace dump.
+
+Reads an event dump produced by ``repro.obs.write_jsonl`` (e.g. via
+``benchmarks/serve_qps.py --emit-metrics PATH``), rebuilds the metrics
+registry and span list from it, and prints a human-oriented report:
+the Prometheus-text exposition of every metric series followed by a
+per-name span summary (count, total/max duration). The module only
+needs ``repro.obs`` — numpy + stdlib, no jax — so it runs anywhere the
+dump can be copied to, including boxes without the accelerator stack.
+
+With ``--validate`` it instead runs ``repro.obs.validate_events`` over
+the raw events and exits non-zero listing every schema problem — the CI
+smoke step uses this to gate that emitted dumps stay loadable.
+
+    python tools/obs_report.py PATH [--validate] [--no-spans]
+
+Exit code: 0 on success; with ``--validate``, the number of problems
+found (capped at 120 by the shell's exit-status width anyway).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from collections import defaultdict
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.obs import read_jsonl, registry_from_events, validate_events  # noqa: E402
+from repro.obs.trace import Tracer  # noqa: E402
+
+
+def span_summary(events: list[dict]) -> list[str]:
+    """Per-name span rollup lines: count, total and max duration.
+
+    Spans are grouped by name across every trace in the dump; durations
+    come straight from the recorded ``t_start``/``t_end`` pairs.
+    """
+    spans = Tracer.spans_from_events(ev for ev in events
+                                     if ev.get("event") == "span")
+    agg: dict[str, list[float]] = defaultdict(list)
+    for s in spans:
+        agg[s.name].append(s.duration)
+    lines = []
+    for name in sorted(agg):
+        durs = agg[name]
+        lines.append(f"{name:<24} n={len(durs):<6} "
+                     f"total_s={sum(durs):.4f} max_s={max(durs):.6f}")
+    return lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point: render (default) or ``--validate`` a dump."""
+    ap = argparse.ArgumentParser(
+        description="render/validate a juno.obs.v1 JSONL dump")
+    ap.add_argument("path", help="JSONL event dump "
+                    "(serve_qps.py --emit-metrics output)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the events; exit = problem count")
+    ap.add_argument("--no-spans", action="store_true",
+                    help="skip the span summary section")
+    args = ap.parse_args(argv)
+
+    events = read_jsonl(args.path)
+    if args.validate:
+        problems = validate_events(events)
+        for p in problems:
+            print(f"PROBLEM: {p}", file=sys.stderr)
+        print(f"{args.path}: {len(events)} events, "
+              f"{len(problems)} problems")
+        return min(len(problems), 120)
+
+    registry = registry_from_events(events)
+    meta = next((ev for ev in events if ev.get("event") == "meta"), {})
+    extras = {k: v for k, v in meta.items()
+              if k not in ("event", "schema")}
+    print(f"# schema={meta.get('schema', '?')} "
+          + " ".join(f"{k}={v}" for k, v in sorted(extras.items())))
+    sys.stdout.write(registry.render_text())
+    if not args.no_spans:
+        lines = span_summary(events)
+        if lines:
+            print("\n# spans")
+            for line in lines:
+                print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
